@@ -1,0 +1,46 @@
+"""Fig 7.2 analogue: single EM-Alltoallv call, PEMS1-indirect vs PEMS2-direct,
+k ∈ {1, 4}: wall time + ledger I/O + the thesis' analytic times."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ContextLayout, Pems, PemsConfig, analysis
+from .common import emit, time_fn
+
+
+def run():
+    model = analysis.MachineModel(B=4096, S=1.0, G=1.0)
+    for n_words in (1 << 14, 1 << 16, 1 << 18):   # total payload words
+        for k in (1, 4):
+            v = 16
+            omega = n_words // (v * v)
+            lo = (ContextLayout()
+                  .add("send", (v, omega), jnp.int32)
+                  .add("recv", (v, omega), jnp.int32))
+            for mode in ("direct", "indirect"):
+                pems = Pems(PemsConfig(v=v, k=k), lo)
+                store = pems.init()
+
+                @jax.jit
+                def call(data):
+                    from repro.core import ContextStore
+                    st = ContextStore(lo, data)
+                    st = pems.alltoallv(st, "send", "recv", mode=mode)
+                    return st.data
+
+                us = time_fn(call, store.data)
+                base = Pems(PemsConfig(v=v, k=k), lo)
+                base.ledger = type(base.ledger)()
+                st2 = base.init()
+                base.alltoallv(st2, "send", "recv", mode=mode)
+                io = base.ledger.io_total
+                if mode == "direct":
+                    t_model = analysis.pems2_alltoallv_seq_time(
+                        v, k, lo.live_bytes, omega * 4, model)
+                else:
+                    t_model = analysis.pems1_alltoallv_time(
+                        v, lo.live_bytes, omega * 4, model)
+                emit(f"alltoallv_{mode}_n{n_words}_k{k}", us,
+                     f"io_bytes={io};model_time_blocks={t_model:.0f}")

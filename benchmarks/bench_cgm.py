@@ -1,0 +1,24 @@
+"""Figs 8.15–8.20 analogue: CGM applications (sample sort + prefix sum)
+scaling, per driver."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pems_apps import prefix_sum, psrs_sort
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(3)
+    for n in (1 << 16, 1 << 18):
+        x = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+        for driver in ("explicit", "sliced"):
+            us = time_fn(
+                lambda d=driver: psrs_sort(x, v=8, k=2, driver=d), iters=1)
+            emit(f"cgm_sort_{driver}_n{n}", us, "")
+        xp = rng.integers(-100, 100, size=n, dtype=np.int32)
+        for driver in ("explicit", "sliced"):
+            us = time_fn(
+                lambda d=driver: prefix_sum(xp, v=8, k=2, driver=d), iters=1)
+            emit(f"cgm_prefix_{driver}_n{n}", us, "")

@@ -1,0 +1,53 @@
+"""Figs 7.7/7.8: buffer space and run-time summary for every collective —
+measured wall time, ledger I/O, and the closed-form time models."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ContextLayout, ContextStore, Pems, PemsConfig, analysis
+from .common import emit, time_fn
+
+
+def run():
+    v, k, n = 16, 4, 256
+    model = analysis.MachineModel()
+    lo = (ContextLayout()
+          .add("x", (n,), jnp.float32)
+          .add("out", (n,), jnp.float32)
+          .add("gath", (v, n), jnp.float32)
+          .add("send", (v, n), jnp.int32)
+          .add("recv", (v, n), jnp.int32))
+    omega_b = n * 4
+    mu = lo.live_bytes
+
+    ops = {
+        "bcast": (lambda p, st: p.bcast(st, "x"),
+                  analysis.em_bcast_time(v, 1, k, mu, omega_b, model),
+                  omega_b),
+        "gather": (lambda p, st: p.gather(st, "x", "gath"),
+                   analysis.em_gather_time(v, 1, mu, omega_b, model),
+                   v * omega_b),
+        "reduce": (lambda p, st: p.reduce(st, "x", "out"),
+                   analysis.em_reduce_time(v, 1, k, n, 4, model),
+                   k * n * 4),
+        "alltoallv": (lambda p, st: p.alltoallv(st, "send", "recv"),
+                      analysis.pems2_alltoallv_seq_time(
+                          v, k, mu, omega_b, model),
+                      analysis.pems2_alltoallv_seq_buffer(v, 1, 4096)),
+    }
+    for name, (fn, t_model, buf) in ops.items():
+        pems = Pems(PemsConfig(v=v, k=k), lo)
+        store = pems.init()
+
+        @jax.jit
+        def call(data, fn=fn, pems=pems):
+            return fn(pems, ContextStore(lo, data)).data
+
+        us = time_fn(call, store.data)
+        pems2 = Pems(PemsConfig(v=v, k=k), lo)
+        fn(pems2, pems2.init())
+        emit(f"collective_{name}", us,
+             f"io={pems2.ledger.io_total};buffer_bytes={buf};"
+             f"model_time_blocks={t_model:.1f}")

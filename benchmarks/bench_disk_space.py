@@ -1,0 +1,16 @@
+"""Fig 6.2: disk-space requirements, PEMS1 vs PEMS2 (exact table)."""
+
+from __future__ import annotations
+
+from repro.core import analysis
+from .common import emit
+
+
+def run():
+    GiB = 1024 ** 3
+    for (P, v, req, p1p, p1t, p2p, p2t) in analysis.disk_space_table(
+            8, 2 * GiB):
+        emit(f"disk_space_P{P}", 0.0,
+             f"v={v};required={req // GiB}GiB;pems1_per_proc={p1p // GiB}GiB;"
+             f"pems1_total={p1t // GiB}GiB;pems2_per_proc={p2p // GiB}GiB;"
+             f"pems2_total={p2t // GiB}GiB")

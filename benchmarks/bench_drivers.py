@@ -1,0 +1,25 @@
+"""Figs 8.12–8.14 analogue: the same program under the three I/O drivers.
+Prefix sum only touches its big field in the first/last superstep, so the
+sliced ("mmap") driver's ledger collapses — the thesis' flat mmap curves."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pems_apps import prefix_sum
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(2)
+    n = 1 << 20
+    x = rng.integers(-100, 100, size=n, dtype=np.int32)
+    for driver in ("explicit", "async", "sliced"):
+        out, pems = prefix_sum(x, v=16, k=4, driver=driver, return_pems=True)
+        assert (out == np.cumsum(x).astype(np.int32)).all()
+        us = time_fn(lambda d=driver: prefix_sum(x, v=16, k=4, driver=d),
+                     iters=1)
+        led = pems.ledger
+        emit(f"prefix_sum_{driver}_n{n}", us,
+             f"swap={led.swap_total};io={led.io_total};"
+             f"barriers={led.supersteps}")

@@ -1,0 +1,23 @@
+"""Fig 8.24 analogue: Euler tour of random forests, scaling the node count."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pems_apps import euler_tour
+from .common import emit, time_fn
+
+
+def _forest(rng, n, trees):
+    parent = np.arange(n)
+    for i in range(trees, n):
+        parent[i] = rng.integers(0, i)
+    return parent
+
+
+def run():
+    rng = np.random.default_rng(4)
+    for n in (256, 1024, 4096):
+        parent = _forest(rng, n, 4)
+        us = time_fn(lambda p=parent: euler_tour(p, v=8, k=2), iters=1)
+        emit(f"euler_tour_n{n}", us, "trees=4")

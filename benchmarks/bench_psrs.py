@@ -1,0 +1,43 @@
+"""Figs 8.2–8.6 analogue: PSRS on PEMS2 (direct) vs PEMS1 (indirect) vs the
+hand-built EM sort stand-in (jnp.sort ≙ STXXL), scaling the problem via v;
+plus the P-scaling I/O model (wall-clock P>1 needs real hosts)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import analysis
+from repro.pems_apps import psrs_sort
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n in (1 << 16, 1 << 18, 1 << 20):
+        x = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+        v, k = 16, 4
+
+        for mode in ("direct", "indirect"):
+            out, pems = psrs_sort(x, v=v, k=k, mode=mode, return_pems=True)
+            assert (out == np.sort(x)).all()
+            us = time_fn(lambda: psrs_sort(x, v=v, k=k, mode=mode), iters=1)
+            led = pems.ledger
+            emit(f"psrs_{mode}_n{n}", us,
+                 f"io={led.io_total};swap={led.swap_total};"
+                 f"msg_ind={led.msg_indirect};disk={led.disk_space}")
+
+        us = time_fn(lambda: np.asarray(jnp.sort(jnp.asarray(x))), iters=2)
+        emit(f"stxxl_stand_in_jnp_sort_n{n}", us, "baseline")
+
+    # Fig 8.6: relative speedup model as real processors are added (I/O-model
+    # derived: the wall-clock needs real hosts; the ledger is exact).
+    n = 1 << 20
+    v, k, omega_b = 32, 4, (2 * (n // 32) // 32) * 4
+    mu = (n // v) * 4 * 4
+    base = None
+    for P in (1, 2, 4, 8):
+        io = analysis.pems2_alltoallv_par_io_exact(v, P, k, mu, omega_b, 4096)
+        t = io / P     # per-processor I/O time (fully parallel disks)
+        base = base or t
+        emit(f"psrs_model_speedup_P{P}", t, f"speedup={base / t:.2f}")

@@ -1,0 +1,29 @@
+"""Fig 8.7 analogue: growing context size μ at constant v.  PEMS1's indirect
+area grows with v·μ and its I/O with 4vμ; PEMS2's with vμ — the gap widens
+with μ (on spinning disks the seek distance amplified this further)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pems_apps import psrs_sort
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(1)
+    v, k = 8, 2
+    for n in (1 << 16, 1 << 18, 1 << 20):      # μ grows with n at constant v
+        x = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+        row = {}
+        for mode in ("direct", "indirect"):
+            us = time_fn(lambda m=mode: psrs_sort(x, v=v, k=k, mode=m),
+                         iters=1)
+            _, pems = psrs_sort(x, v=v, k=k, mode=mode, return_pems=True)
+            row[mode] = (us, pems.ledger)
+        mu = row["direct"][1].disk_space // v
+        emit(f"psrs_mu_direct_n{n}", row["direct"][0],
+             f"mu_bytes={mu};io={row['direct'][1].io_total}")
+        emit(f"psrs_mu_indirect_n{n}", row["indirect"][0],
+             f"mu_bytes={mu};io={row['indirect'][1].io_total};"
+             f"disk={row['indirect'][1].disk_space}")

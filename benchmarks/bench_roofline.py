@@ -1,0 +1,46 @@
+"""§Roofline: the per-(arch × shape) roofline table from dry-run artifacts
+(single-pod).  Run ``python -m repro.launch.dryrun --all`` first; cells with
+no artifact are reported as missing rather than recomputed (compiling all 40
+cells takes ~an hour on one CPU core)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(ART, "*__single.json")))
+    if not files:
+        emit("roofline_missing", 0.0,
+             f"no artifacts under {ART}; run repro.launch.dryrun first")
+        return
+    for fn in files:
+        with open(fn) as f:
+            d = json.load(f)
+        if "error" in d:
+            emit(f"roofline_{d['arch']}_{d['shape']}", 0.0, "ERROR")
+            continue
+        if "skipped" in d:
+            continue
+        c = d.get("calibrated")
+        r = (c or d)["roofline"]
+        uf = (c or d).get("useful_flop_ratio", 0.0)
+        frac_opt = (c or {}).get(
+            "roofline_fraction_optimistic", r["roofline_fraction"])
+        emit(
+            f"roofline_{d['arch']}_{d['shape']}",
+            r["step_lower_bound_s"] * 1e6,
+            f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+            f"collective_s={r['collective_s']:.4g};dominant={r['dominant']};"
+            f"fraction={r['roofline_fraction']:.3f};"
+            f"fraction_optimistic={frac_opt:.3f};"
+            f"useful_flops={uf:.3f};"
+            f"fits_hbm={d['memory']['fits_hbm']};"
+            f"calibrated={bool(c)}",
+        )

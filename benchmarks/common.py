@@ -1,0 +1,32 @@
+"""Benchmark utilities: wall-clock timing with warmup + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (blocks on async dispatch)."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(out):
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

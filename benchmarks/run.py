@@ -1,0 +1,60 @@
+"""Benchmark driver — one module per thesis table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set ``BENCH_FAST=1`` for the
+reduced sweep (CI), ``DRYRUN_ARTIFACTS`` to point the roofline table at a
+different artifact directory.
+
+Figure map (see DESIGN.md §7):
+  bench_alltoallv    Fig 7.2     bench_disk_space  Fig 6.2
+  bench_collectives  Fig 7.7/7.8 bench_psrs        Fig 8.2–8.6
+  bench_psrs_mu      Fig 8.7     bench_drivers     Fig 8.12–8.14
+  bench_cgm          Fig 8.15–8.20  bench_euler    Fig 8.24
+  bench_roofline     §Roofline (assignment)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    bench_alltoallv,
+    bench_cgm,
+    bench_collectives,
+    bench_disk_space,
+    bench_drivers,
+    bench_euler,
+    bench_psrs,
+    bench_psrs_mu,
+    bench_roofline,
+)
+
+MODULES = [
+    ("disk_space", bench_disk_space),
+    ("collectives", bench_collectives),
+    ("alltoallv", bench_alltoallv),
+    ("psrs", bench_psrs),
+    ("psrs_mu", bench_psrs_mu),
+    ("drivers", bench_drivers),
+    ("cgm", bench_cgm),
+    ("euler", bench_euler),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""PEMS2 core: external-memory simulation of BSP algorithms in JAX.
+
+Public API::
+
+    from repro.core import (
+        Pems, PemsConfig, ContextLayout, ContextStore, Ctx, Field,
+        Allocator, IOLedger, analysis,
+    )
+"""
+
+from . import analysis
+from .context import (
+    Allocator,
+    Ctx,
+    ContextLayout,
+    ContextStore,
+    Field,
+    WORD,
+    init_store,
+    layout,
+)
+from .executor import DRIVERS, Pems, PemsConfig
+from .iostats import IOLedger
+
+__all__ = [
+    "Allocator",
+    "Ctx",
+    "ContextLayout",
+    "ContextStore",
+    "DRIVERS",
+    "Field",
+    "IOLedger",
+    "Pems",
+    "PemsConfig",
+    "WORD",
+    "analysis",
+    "init_store",
+    "layout",
+]

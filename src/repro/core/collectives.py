@@ -1,0 +1,272 @@
+"""EM collective communication (thesis §2.2, §6.2, §7).
+
+Message model: a sending context holds a field of shape ``[v, ω]`` (one padded
+message per destination, ω the thesis' per-message bound) plus a ``[v]`` count
+field; after Alltoallv the receiving context's ``[v, ω]`` field holds message
+``recv[s] = send_of_s[ρ]``.  The destination slot offsets are static layout
+offsets — the thesis' shared offset table ``T`` (§6.2) made trace-time.
+
+Two Alltoallv implementations are provided:
+
+* ``mode="direct"``   — PEMS2 (Alg 7.1.1/7.1.2): messages move straight from
+  source contexts to destination contexts; with ``P > 1`` the network phase is
+  α-chunked (Alg 7.1.3) so the shared communication buffer stays ≤ α·k·ω.
+* ``mode="indirect"`` — PEMS1 baseline (Alg 2.2.1): messages are staged
+  through a separate "indirect area" (an extra ``[v, v, ω]`` buffer behind an
+  optimization barrier so XLA cannot fuse the copy away), costing the extra
+  write+read the thesis eliminates.
+
+The I/O ledger is updated with *event-level* counts that tests validate
+against the closed forms in :mod:`repro.core.analysis`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as _np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .context import ContextStore, WORD
+
+
+# --------------------------------------------------------------------------- #
+# Alltoallv                                                                    #
+# --------------------------------------------------------------------------- #
+
+def alltoallv(
+    self,
+    store: ContextStore,
+    send: str,
+    recv: str,
+    send_counts: Optional[str] = None,
+    recv_counts: Optional[str] = None,
+    mode: str = "direct",
+) -> ContextStore:
+    """Every VP ρ sends message ``send[d]`` to VP d; after the call VP ρ holds
+    ``recv[s] =`` (s's message to ρ) and transposed counts."""
+    if mode not in ("direct", "indirect"):
+        raise ValueError(f"unknown mode {mode!r}")
+    cfg = self.cfg
+    f = store.layout.field(send)
+    if store.layout.field(recv).shape != f.shape:
+        raise ValueError("send/recv field shapes must match")
+    if f.shape[0] != cfg.v:
+        raise ValueError(f"alltoallv fields must be [v, ω]; got {f.shape}")
+    omega_b = int(_np.prod(f.shape[1:], dtype=_np.int64)) * WORD if len(f.shape) > 1 else WORD
+
+    M = store.field(send)                      # [v, v, ω...]
+    M = M.reshape(cfg.v, cfg.v, -1)
+
+    if mode == "indirect":
+        # PEMS1: stage every message in the indirect area first.  The barrier
+        # forces the staging copy to materialise.
+        M = jax.lax.optimization_barrier(M)
+
+    Mt = _global_transpose(self, M)            # [v, v, ω] with axes (dst, src)
+    store = store.with_field(recv, Mt.reshape((cfg.v,) + f.shape))
+    if send_counts is not None and recv_counts is not None:
+        C = store.field(send_counts).reshape(cfg.v, cfg.v, 1)
+        if mode == "indirect":
+            C = jax.lax.optimization_barrier(C)
+        Ct = _global_transpose(self, C)
+        store = store.with_field(
+            recv_counts, Ct.reshape(cfg.v, cfg.v).astype(
+                store.layout.field(recv_counts).dtype)
+        )
+
+    _ledger_alltoallv(self, omega_b, mode)
+    return store
+
+
+def _global_transpose(self, M: jnp.ndarray) -> jnp.ndarray:
+    """[v(src), v(dst), w] → [v(dst), v(src), w], sharded on axis 0 over the
+    vp axis when P > 1 (α-chunked all_to_all, Alg 7.1.3)."""
+    cfg = self.cfg
+    if cfg.P == 1:
+        return jnp.swapaxes(M, 0, 1)
+
+    from jax import shard_map
+
+    m = cfg.v_local
+    Pn = cfg.P
+    alpha = cfg.alpha or m
+    w = M.shape[-1]
+
+    def f(local):                              # [m(src_local), v, w]
+        x = local.reshape(m, Pn, m, w)         # (src_local, dst_proc, dst_local, w)
+        chunks = []
+        for c0 in range(0, m, alpha):
+            c1 = min(c0 + alpha, m)
+            xc = x[:, :, c0:c1, :]             # bounded buffer: α·ω per lane
+            yc = lax.all_to_all(
+                xc, cfg.vp_axis, split_axis=1, concat_axis=0, tiled=False
+            )                                   # [P(src_proc), m, c, w]
+            chunks.append(yc)
+        y = jnp.concatenate(chunks, axis=2) if len(chunks) > 1 else chunks[0]
+        y = y.reshape(Pn * m, m, w)            # (src_global, dst_local, w)
+        return jnp.swapaxes(y, 0, 1)           # (dst_local, src_global, w)
+
+    return shard_map(
+        f,
+        mesh=self.mesh,
+        in_specs=(P(cfg.vp_axis, None, None),),
+        out_specs=P(cfg.vp_axis, None, None),
+    )(M)
+
+
+def _ledger_alltoallv(self, omega_b: int, mode: str) -> None:
+    cfg = self.cfg
+    B = cfg.block_bytes
+    v, k, Pn = cfg.v, cfg.k, cfg.P
+    m = cfg.v_local
+    mu = self.layout.live_bytes
+    led = self.ledger
+
+    if mode == "direct":
+        # Alg 7.1.1 / 7.1.2 event counts (validated vs Lemma 7.1.3 and the
+        # exact parallel model in analysis.pems2_alltoallv_par_io_exact).
+        delta = (m * m + m * k) // 2           # ID-ordered rounds, per proc
+        led.add_swap_out(v * max(mu - v * omega_b, 0), B)
+        led.add_msg_direct(Pn * delta * omega_b, B)
+        led.add_msg_indirect(Pn * 2 * (m * m - delta) * omega_b, B)
+        if Pn > 1:
+            led.add_network(v * (v - m) * omega_b)
+            led.add_msg_direct(v * (v - m) * omega_b, B)
+        led.add_boundary(2 * v * v * B, B)
+        led.add_barrier(3)
+    else:
+        # Alg 2.2.1 event counts (Lemma 2.2.1: 4vμ + 2v²ω) + §2.3.3 indirect
+        # network routing (each remote message crosses the wire twice).
+        led.add_msg_indirect(v * v * omega_b, B)      # write to indirect area
+        led.add_swap_out(v * mu, B)
+        led.add_swap_in(v * mu, B)
+        led.add_msg_indirect(v * v * omega_b, B)      # read back for delivery
+        led.add_swap_out(v * mu, B)
+        led.add_swap_in(v * mu, B)
+        if Pn > 1:
+            led.add_network(2 * v * (v - m) * omega_b)
+        led.require_disk(v * mu // Pn + v * v * omega_b)
+        led.add_barrier(2)
+
+
+# --------------------------------------------------------------------------- #
+# Rooted collectives (§7.2–7.4) — global-array ops; GSPMD inserts the network  #
+# collectives, the ledger carries the thesis' worst-case EM terms.             #
+# --------------------------------------------------------------------------- #
+
+def bcast(self, store: ContextStore, field: str, root: int = 0) -> ContextStore:
+    """EM-Bcast (Alg 7.2.1): root's field value lands in every context."""
+    cfg = self.cfg
+    vals = store.field(field)                  # [v, ...]
+    val = lax.dynamic_index_in_dim(vals, root, axis=0, keepdims=False)
+    out = jnp.broadcast_to(val, vals.shape)
+    store = store.with_field(field, out)
+
+    B = cfg.block_bytes
+    mu = self.layout.live_bytes
+    omega_b = self.layout.field_bytes(field)
+    # Lemma 7.2.1: root-partition sharers swap out and back in; every VP
+    # delivers ω to its context.
+    self.ledger.add_swap_out(cfg.v * mu // (cfg.P * cfg.k), B)
+    self.ledger.add_swap_in(cfg.v * mu // (cfg.P * cfg.k), B)
+    self.ledger.add_msg_direct(cfg.v * omega_b, B)
+    if cfg.P > 1:
+        self.ledger.add_network((cfg.P - 1) * omega_b)
+    self.ledger.add_barrier()
+    return store
+
+
+def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
+           ) -> ContextStore:
+    """EM-Gather (Alg 7.3.1): every VP's ``send`` ([ω]) lands in the root's
+    ``recv`` ([v, ω]).  Non-root recv fields are left untouched."""
+    cfg = self.cfg
+    fs = store.layout.field(send)
+    fr = store.layout.field(recv)
+    if fr.shape != (cfg.v,) + fs.shape:
+        raise ValueError(f"recv must be [v, *send.shape]; got {fr.shape}")
+    A = store.field(send)                      # [v, ...] gathered result
+    R = store.field(recv)                      # [v, v, ...]
+    R = R.at[root].set(A.astype(fr.dtype))
+    store = store.with_field(recv, R)
+
+    B = cfg.block_bytes
+    omega_b = self.layout.field_bytes(send)
+    # Lemma 7.3.1 (exact form): the root may swap out (μ) and the gathered
+    # v·ω result is written to its context on disk.
+    self.ledger.add_swap_out(self.layout.live_bytes, B)
+    self.ledger.add_msg_direct(cfg.v * omega_b, B)
+    if cfg.P > 1:
+        self.ledger.add_network((cfg.v - cfg.v_local) * omega_b)
+    self.ledger.add_barrier()
+    return store
+
+
+def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
+    """Every VP receives every VP's ``send`` into ``recv`` ([v, ω])."""
+    cfg = self.cfg
+    A = store.field(send)                      # [v, ...]
+    out = jnp.broadcast_to(
+        A[None], (cfg.v,) + A.shape
+    ).astype(store.layout.field(recv).dtype)
+    store = store.with_field(recv, out)
+    # An allgather is an Alltoallv with equal messages — same ledger shape.
+    _ledger_alltoallv(self, self.layout.field_bytes(send), "direct")
+    return store
+
+
+def reduce(self, store: ContextStore, field: str, out_field: str,
+           op: str = "add", root: int = 0) -> ContextStore:
+    """EM-Reduce (Alg 7.4.1): vectorised reduction of each VP's ``field``
+    ([n]) into the root's ``out_field`` ([n])."""
+    vals = store.field(field)                  # [v, n]
+    red = _reduce_op(op)(vals)
+    R = store.field(out_field)
+    R = R.at[root].set(red.astype(R.dtype))
+    store = store.with_field(out_field, R)
+    _ledger_reduce(self, self.layout.field_bytes(out_field))
+    return store
+
+
+def allreduce(self, store: ContextStore, field: str, out_field: str,
+              op: str = "add") -> ContextStore:
+    vals = store.field(field)
+    red = _reduce_op(op)(vals)
+    out = jnp.broadcast_to(red[None], vals.shape)
+    store = store.with_field(
+        out_field, out.astype(store.layout.field(out_field).dtype)
+    )
+    _ledger_reduce(self, self.layout.field_bytes(out_field))
+    # The rebroadcast delivers n·ω to every context.
+    self.ledger.add_msg_direct(
+        (self.cfg.v - 1) * self.layout.field_bytes(out_field),
+        self.cfg.block_bytes,
+    )
+    return store
+
+
+def _reduce_op(op: str):
+    ops = {
+        "add": lambda x: jnp.sum(x, axis=0),
+        "max": lambda x: jnp.max(x, axis=0),
+        "min": lambda x: jnp.min(x, axis=0),
+    }
+    if op not in ops:
+        raise ValueError(f"unsupported reduce op {op!r} (PEMS requires "
+                         "commutative+associative operators, §7.4)")
+    return ops[op]
+
+
+def _ledger_reduce(self, n_bytes: int) -> None:
+    cfg = self.cfg
+    # Lemma 7.4.2: the root delivers the n-vector result to its context; the
+    # network phase is a logarithmic tree (Lemma 7.4.3).
+    self.ledger.add_msg_direct(n_bytes, cfg.block_bytes)
+    if cfg.P > 1:
+        import math
+        self.ledger.add_network(n_bytes * math.ceil(math.log2(cfg.P)))
+    self.ledger.add_barrier(2)

@@ -1,0 +1,111 @@
+"""Trace-time I/O ledger for the PEMS2 simulation.
+
+The thesis measures algorithms by *I/O volume* (bytes moved between RAM and
+external memory) and *number of I/O operations* (block transfers).  Both are
+statically determined by the simulation parameters (v, P, k, mu, omega, B) and
+the deterministic ID-ordered round schedule (thesis §6.5), so the ledger is a
+pure-Python event counter updated at trace time.  Tests assert that the ledger
+reproduces the thesis' closed forms (``repro.core.analysis``) exactly.
+
+Byte categories mirror the thesis' cost terms:
+
+* ``swap_in`` / ``swap_out``      — context swapping (the ``S`` coefficient)
+* ``msg_direct``                  — messages delivered directly to a context on
+                                    disk (PEMS2, §6.2)
+* ``msg_indirect``                — messages staged through the indirect area
+                                    (PEMS1, §2.2) or re-read for late delivery
+* ``boundary``                    — boundary-block cache flushes (§6.2)
+* ``network``                     — bytes crossing the real-processor network
+                                    (the ``g`` coefficient)
+* ``disk_space``                  — peak external-memory footprint (§6.3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class IOLedger:
+    """Byte counters for one simulated program run."""
+
+    swap_in: int = 0
+    swap_out: int = 0
+    msg_direct: int = 0
+    msg_indirect: int = 0
+    boundary: int = 0
+    network: int = 0
+    disk_space: int = 0
+    num_ios: int = 0          # block-granular I/O operations
+    supersteps: int = 0       # internal superstep barriers (the ``L`` term)
+
+    # ------------------------------------------------------------------ totals
+    @property
+    def swap_total(self) -> int:
+        return self.swap_in + self.swap_out
+
+    @property
+    def message_total(self) -> int:
+        return self.msg_direct + self.msg_indirect + self.boundary
+
+    @property
+    def io_total(self) -> int:
+        """Total external-memory traffic (the thesis' "I/O volume")."""
+        return self.swap_total + self.message_total
+
+    # ------------------------------------------------------------------ events
+    def add_swap_in(self, nbytes: int, block: int) -> None:
+        self.swap_in += nbytes
+        self.num_ios += _blocks(nbytes, block)
+
+    def add_swap_out(self, nbytes: int, block: int) -> None:
+        self.swap_out += nbytes
+        self.num_ios += _blocks(nbytes, block)
+
+    def add_msg_direct(self, nbytes: int, block: int) -> None:
+        self.msg_direct += nbytes
+        self.num_ios += _blocks(nbytes, block)
+
+    def add_msg_indirect(self, nbytes: int, block: int) -> None:
+        self.msg_indirect += nbytes
+        self.num_ios += _blocks(nbytes, block)
+
+    def add_boundary(self, nbytes: int, block: int) -> None:
+        self.boundary += nbytes
+        self.num_ios += _blocks(nbytes, block)
+
+    def add_network(self, nbytes: int) -> None:
+        self.network += nbytes
+
+    def add_barrier(self, n: int = 1) -> None:
+        self.supersteps += n
+
+    def require_disk(self, nbytes: int) -> None:
+        self.disk_space = max(self.disk_space, nbytes)
+
+    # ---------------------------------------------------------------- reporting
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self) | {
+            "swap_total": self.swap_total,
+            "message_total": self.message_total,
+            "io_total": self.io_total,
+        }
+
+    def merge(self, other: "IOLedger") -> "IOLedger":
+        out = IOLedger()
+        for f in dataclasses.fields(IOLedger):
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        out.disk_space = max(self.disk_space, other.disk_space)
+        return out
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        d = self.as_dict()
+        return "IOLedger(" + ", ".join(f"{k}={v:,}" for k, v in d.items()) + ")"
+
+
+def _blocks(nbytes: int, block: int) -> int:
+    """Number of block-granular I/O operations for an ``nbytes`` transfer."""
+    if nbytes <= 0:
+        return 0
+    return -(-nbytes // block)

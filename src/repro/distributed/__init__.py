@@ -1,0 +1,3 @@
+from .sharding import batch_specs_sharded, cache_pspec, param_pspecs, ShardingRules
+
+__all__ = ["ShardingRules", "batch_specs_sharded", "cache_pspec", "param_pspecs"]

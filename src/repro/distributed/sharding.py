@@ -1,0 +1,209 @@
+"""Sharding rules: map every parameter / activation / cache tensor to a
+PartitionSpec on the (pod, data, model) production mesh.
+
+Strategy (GSPMD fills in the collectives):
+
+* **TP** on the model axis: attention heads, FFN hidden dim, expert dim,
+  vocab dim.
+* **DP** on (pod, data): the batch dimension of activations and caches.
+* **FSDP** (optional) on the data axis: parameters additionally sharded on a
+  non-TP dim so the giant MoE configs fit (ZeRO-3 style; GSPMD all-gathers
+  them per layer inside the scan).
+* A dim is only assigned a mesh axis when divisible by it — otherwise the
+  tensor is replicated on that axis (e.g. kv_heads=1 MQA replicates KV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ("data",)     # ("pod", "data") multi-pod
+    fsdp: bool = False                         # shard params on data too
+    # Which expert-weight dim carries the FSDP shard:
+    #   "ff"       — output/hidden dim (ZeRO-style; XLA hoists the gather of
+    #                the whole stacked expert array out of the layer scan)
+    #   "contract" — contraction dim (matmul partial-sums + psum; weights are
+    #                never gathered)  [§Perf iteration #4]
+    expert_fsdp_dim: str = "contract"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def data_size(self) -> int:
+        out = 1
+        for a in self.data_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def _spec_for_param(rules: ShardingRules, path: str,
+                    shape: Tuple[int, ...]) -> P:
+    """Parameter placement by name pattern.  Leading 'layers' stack dims are
+    never sharded."""
+    ax_m = rules.model_axis
+    ms = rules.model_size
+    spec = [None] * len(shape)
+
+    def put(dim: int, axis) -> bool:
+        size = (rules.data_size if axis != ax_m else ms)
+        if spec[dim] is None and _divisible(shape[dim], size):
+            spec[dim] = axis
+            return True
+        return False
+
+    stacked = path.startswith(("layers", "dense0", "extra"))
+    base = 1 if stacked else 0          # skip the scan-stack dim
+
+    def d(i):                            # logical dim index
+        return base + i
+
+    leaf = path.split("/")[-1]
+    group = path.split("/")[-2] if "/" in path else ""
+
+    rank = len(shape) - base             # logical (unstacked) rank
+
+    if leaf == "embed" or path.endswith("embed"):
+        put(0, ax_m)                     # vocab
+    elif leaf == "head":
+        put(1, ax_m)                     # [d, vocab]
+    elif leaf in ("wq", "wk", "wv"):
+        put(d(1), ax_m)                  # [d, H, dh] → heads
+    elif leaf == "wo":
+        put(d(0), ax_m)                  # [H, dh, d] → heads
+    elif leaf == "w_in" and rank == 4:   # expert stack [E, d, g, ff]
+        put(d(0), ax_m)                  # experts (EP)
+        if rules.fsdp and rules.expert_fsdp_dim != "none":
+            put(d(1) if rules.expert_fsdp_dim == "contract" else d(3),
+                rules.data_axes)
+    elif leaf == "w_out" and rank == 3 and "moe" in path:
+        put(d(0), ax_m)                  # [E, ff, d]
+        if rules.fsdp and rules.expert_fsdp_dim != "none":
+            put(d(1), rules.data_axes)   # ff: contraction dim of the 2nd mm
+    elif leaf == "w_in":                 # dense MLP [d, g, ff]
+        put(d(2), ax_m)
+    elif leaf == "w_out":                # dense MLP [ff, d]
+        put(d(0), ax_m)
+    elif leaf == "router":
+        pass                             # small: replicate
+    elif leaf in ("in_proj", "out_proj", "in_x", "in_gate", "out",
+                  "w_a", "w_i"):
+        put(d(1), ax_m)                  # project wide dim
+    if rules.fsdp and all(s is None for s in spec):
+        # ZeRO fallback: biggest dim on data axes if divisible.
+        dims = sorted(range(base, len(shape)), key=lambda i: -shape[i])
+        for i in dims:
+            if _divisible(shape[i], rules.data_size):
+                spec[i] = rules.data_axes
+                break
+    return P(*spec)
+
+
+def param_pspecs(rules: ShardingRules, params: Any) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    def one(path, leaf):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        return _spec_for_param(rules, p, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_pspec(rules: ShardingRules, cache: Any) -> Any:
+    """KV/state caches: batch on data axes; the KV sequence dim on the model
+    axis when kv_heads can't use it (the 32k decode memory fix)."""
+    dax = rules.data_axes
+    ax_m = rules.model_axis
+    ms = rules.model_size
+
+    def one(path, leaf):
+        shape = leaf.shape
+        names = [str(getattr(k, "key", "")) for k in path]
+        spec = [None] * len(shape)
+        # layouts: attn k/v [L, B, S, Hkv, dh]; ssm [L, B, H, N, P];
+        # rglru h [L, B, W]; conv [L, B, w, C]
+        if "k" in names or "v" in names:
+            if _divisible(shape[1], rules.data_size):
+                spec[1] = dax
+            if _divisible(shape[3], ms):
+                spec[3] = ax_m           # kv heads
+            elif _divisible(shape[2], ms):
+                spec[2] = ax_m           # cache sequence
+        else:
+            if len(shape) > 1 and _divisible(shape[1], rules.data_size):
+                spec[1] = dax
+            for i in range(2, len(shape)):
+                if _divisible(shape[i], ms):
+                    spec[i] = ax_m
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def batch_specs_sharded(rules: ShardingRules, batch_specs: Dict) -> Dict:
+    """Batch inputs: leading batch dim over the data axes."""
+    def one(s):
+        spec = [None] * len(s.shape)
+        if _divisible(s.shape[0], rules.data_size):
+            spec[0] = rules.data_axes
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(rules.mesh, P(*spec)))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def opt_pspecs(rules: ShardingRules, opt_state: Any, params: Any) -> Any:
+    """Optimizer-state placement: f32 moments mirror their parameter's spec;
+    int8-quantized moments ({"q","scale"}) shard blocks over the data axes
+    (ZeRO-style)."""
+    pspecs = param_pspecs(rules, params)
+
+    def moments(tree):
+        def one(path, leaf):
+            names = [str(getattr(k, "key", "")) for k in path]
+            param_path = [k for k in path
+                          if str(getattr(k, "key", "")) not in ("q", "scale")]
+            sub = pspecs
+            for k in param_path:
+                key = getattr(k, "key", getattr(k, "idx", None))
+                sub = sub[key]
+            if names and names[-1] == "q":
+                return sub                         # int8 q mirrors the param
+            if names and names[-1] == "scale":
+                # scale is param.shape[:-1] + (nb,): drop the last-dim entry.
+                dims = list(sub) + [None] * (len(leaf.shape) - len(sub))
+                dims = dims[: len(leaf.shape)]
+                dims[-1] = None
+                return P(*dims)
+            return sub                             # f32 moment mirrors param
+
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    return {
+        "step": P(),
+        "m": moments(opt_state["m"]),
+        "v": moments(opt_state["v"]),
+    }
+
+
+def shardings_for(rules: ShardingRules, specs: Any):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

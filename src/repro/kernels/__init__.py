@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three layers:
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit ``BlockSpec``
+  HBM→VMEM tiling (the TPU-native form of the thesis' blocked explicit I/O).
+* ``ops.py``    — the jit'd public wrapper (padding, reshapes, dtype policy).
+* ``ref.py``    — the pure-jnp oracle every test compares against.
+
+Kernels are validated in ``interpret=True`` mode on CPU; on TPU the same
+``pallas_call`` compiles to Mosaic.
+
+Kernels:
+  flash_attention   — blockwise streaming attention (GQA, causal/full)
+  bitonic_sort      — in-VMEM bitonic network (PSRS local-sort hot spot)
+  alltoallv_deliver — the thesis' §6.2 direct message delivery as an on-chip
+                      permuted block copy with lane-masked boundary handling
+  ssd_scan          — Mamba-2 SSD chunked state scan
+  lru_scan          — RG-LRU gated linear recurrence (RecurrentGemma)
+"""

@@ -1,0 +1,3 @@
+from .ops import deliver
+
+__all__ = ["deliver"]

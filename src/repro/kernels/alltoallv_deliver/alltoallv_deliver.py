@@ -1,0 +1,54 @@
+"""Direct message delivery (thesis §6.2) as a Pallas kernel.
+
+The PEMS2 insight: deliver each message's aligned body straight into the
+destination context and fix up the unaligned edges from a small cache.  On
+TPU the analogue of the disk block is the 128-lane tile: the kernel streams
+message tiles HBM→VMEM with a *permuted* ``BlockSpec`` index map (the
+source's (s, d) tile lands at the destination's (d, s) slot — the offset
+table ``T`` baked into the index map), and the per-message valid length
+``counts[s, d]`` is applied as a lane mask — the boundary-block fix-up,
+performed while the tile is resident instead of with a read-modify-write
+cycle.
+
+Grid: (dst, src).  One grid step moves one message.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _deliver_kernel(cnt_ref, msg_ref, out_ref, *, omega: int, fill):
+    cnt = cnt_ref[0, 0]
+    data = msg_ref[0, 0, :]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (omega,), 0)
+    out_ref[0, 0, :] = jnp.where(lane < cnt, data, fill)
+
+
+def deliver_tiles(
+    msgs: jnp.ndarray,          # [v, v, ω]  (src, dst, payload)
+    counts: jnp.ndarray,        # [v, v] int32 valid lengths
+    *,
+    fill=0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns ``out [v, v, ω]`` with ``out[d, s, :counts[s, d]] ==
+    msgs[s, d, :counts[s, d]]`` and ``fill`` elsewhere."""
+    v, v2, omega = msgs.shape
+    assert v == v2, msgs.shape
+    kernel = functools.partial(_deliver_kernel, omega=omega, fill=fill)
+    return pl.pallas_call(
+        kernel,
+        grid=(v, v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda d, s: (s, d)),
+            pl.BlockSpec((1, 1, omega), lambda d, s: (s, d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, omega), lambda d, s: (d, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, v, omega), msgs.dtype),
+        interpret=interpret,
+    )(counts, msgs)

@@ -1,0 +1,22 @@
+"""Public wrapper for the direct-delivery kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .alltoallv_deliver import deliver_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel", "fill"))
+def deliver(msgs: jnp.ndarray, counts: jnp.ndarray, *, fill=0,
+            interpret: bool = False, use_kernel: bool = True) -> jnp.ndarray:
+    """PEMS2 direct delivery of ``msgs [v, v, ω]`` with valid lengths
+    ``counts [v, v]`` → ``[v(dst), v(src), ω]``."""
+    if not use_kernel:
+        from .ref import deliver_ref
+        return deliver_ref(msgs, counts, fill=fill)
+    return deliver_tiles(msgs, counts.astype(jnp.int32), fill=fill,
+                         interpret=interpret)

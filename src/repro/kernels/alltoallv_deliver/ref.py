@@ -1,0 +1,11 @@
+"""Oracle for direct delivery: masked transpose."""
+
+import jax.numpy as jnp
+
+
+def deliver_ref(msgs: jnp.ndarray, counts: jnp.ndarray, *, fill=0) -> jnp.ndarray:
+    v, _, omega = msgs.shape
+    t = jnp.swapaxes(msgs, 0, 1)                 # [dst, src, ω]
+    ct = jnp.swapaxes(counts, 0, 1)              # [dst, src]
+    lane = jnp.arange(omega)[None, None, :]
+    return jnp.where(lane < ct[..., None], t, fill)

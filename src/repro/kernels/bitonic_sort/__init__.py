@@ -1,0 +1,3 @@
+from .ops import sort as bitonic_sort
+
+__all__ = ["bitonic_sort"]

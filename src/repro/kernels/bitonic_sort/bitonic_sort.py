@@ -1,0 +1,56 @@
+"""In-VMEM bitonic sorting network (the PSRS local-sort hot spot).
+
+One grid step sorts one row of a ``[rows, n]`` batch entirely inside VMEM
+(n ≤ 2¹⁶ words fits comfortably).  The compare-exchange stages are expressed
+with reshapes and ``jnp.where`` — no gathers — so every stage maps onto TPU
+vector lanes; the whole network is log²(n) unrolled vector steps.
+
+This is the thesis' "RAM algorithm inside a swapped-in context": the row is
+the context, HBM is the external memory, and the sort never touches HBM until
+the row swaps back out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[0, :]
+    log_n = n.bit_length() - 1
+    for stage in range(log_n):
+        for sub in range(stage, -1, -1):
+            stride = 1 << sub
+            groups = n // (2 * stride)
+            xr = x.reshape(groups, 2, stride)
+            a, b = xr[:, 0, :], xr[:, 1, :]
+            # Direction: ascending iff bit (stage+1) of the element index is
+            # 0; constant within a group, alternating with period
+            # 2^(stage-sub) in group index.
+            g = jax.lax.broadcasted_iota(jnp.int32, (groups, 1), 0)
+            asc = ((g >> (stage - sub)) & 1) == 0
+            lo = jnp.minimum(a, b)
+            hi = jnp.maximum(a, b)
+            na = jnp.where(asc, lo, hi)
+            nb = jnp.where(asc, hi, lo)
+            x = jnp.stack([na, nb], axis=1).reshape(n)
+    o_ref[0, :] = x
+
+
+def bitonic_sort_rows(x: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Sort each row of ``[rows, n]`` ascending; n must be a power of two."""
+    rows, n = x.shape
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    kernel = functools.partial(_bitonic_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, n), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x)

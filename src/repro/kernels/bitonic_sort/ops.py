@@ -1,0 +1,46 @@
+"""Public sort wrapper: pads to a power of two with the dtype's max so the
+padding sorts to the tail, then slices it off."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitonic_sort import bitonic_sort_rows
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def sort(x: jnp.ndarray, *, interpret: bool = False,
+         use_kernel: bool = True) -> jnp.ndarray:
+    """Ascending sort of the last axis of a 1-D or 2-D array."""
+    if not use_kernel:
+        return jnp.sort(x, axis=-1)
+
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    rows, n = x.shape
+    n_pad = _next_pow2(n)
+    if n_pad != n:
+        fill = _max_of(x.dtype)
+        x = jnp.concatenate(
+            [x, jnp.full((rows, n_pad - n), fill, x.dtype)], axis=1
+        )
+    out = bitonic_sort_rows(x, interpret=interpret)[:, :n]
+    return out[0] if squeeze else out
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _max_of(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).max
+    return jnp.finfo(dtype).max

@@ -1,0 +1,8 @@
+"""Oracle for the bitonic sort kernel."""
+
+import jax.numpy as jnp
+
+
+def sort_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise (or 1-D) ascending sort."""
+    return jnp.sort(x, axis=-1)

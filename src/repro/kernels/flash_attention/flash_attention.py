@@ -1,0 +1,128 @@
+"""Blockwise (flash) attention Pallas kernel.
+
+Streaming softmax over KV blocks: Q tiles stay resident in VMEM while K/V
+tiles stream HBM→VMEM (the PEMS pattern: the KV sequence is the "external"
+data, the running (m, l, acc) statistics are the resident context).  Causal
+blocks that are fully masked are skipped with ``pl.when``.
+
+Grid: (BH_q, Sq/bq, Sk/bk), KV innermost so the scratch accumulators carry
+across KV steps.  GQA is expressed in the K/V BlockSpec index maps: query
+head h of batch b reads KV head ``h // group`` of the same batch.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, bq, bk, sk_valid, n_kv_blocks):
+    i = pl.program_id(1)        # query block
+    j = pl.program_id(2)        # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = i * bq
+    k0 = j * bk
+    # Skip fully-masked causal blocks (query rows all precede the kv block).
+    run = (not causal) or (k0 <= q0 + bq - 1)
+
+    @pl.when(jnp.bool_(run) if isinstance(run, bool) else run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # [bq, bk]
+
+        col = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = col < sk_valid
+        if causal:
+            row = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (col <= row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # [bq]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jnp.ndarray,            # [BHq, Sq, d]
+    k: jnp.ndarray,            # [BHkv, Sk, d]
+    v: jnp.ndarray,            # [BHkv, Sk, d]
+    *,
+    h_q: int,
+    h_kv: int,
+    causal: bool,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    sk_valid: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Attention over flattened (batch·head) leading dims; Sq % block_q == 0
+    and Sk % block_k == 0 (ops.py pads).  ``sk_valid`` masks padded KV."""
+    bhq, sq, d = q.shape
+    _, sk, _ = k.shape
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    group = h_q // h_kv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    sk_valid = sk if sk_valid is None else sk_valid
+    n_kv = sk // block_k
+
+    def kv_index(h, i, j):
+        b = h // h_q
+        qh = h % h_q
+        return (b * h_kv + qh // group, j, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, bq=block_q, bk=block_k,
+        sk_valid=sk_valid, n_kv_blocks=n_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, sq // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

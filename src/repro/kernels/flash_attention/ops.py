@@ -1,0 +1,72 @@
+"""Public flash-attention wrapper: padding, GQA flattening, dtype policy."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bh
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "use_kernel"),
+)
+def flash_attention(
+    q: jnp.ndarray,            # [B, Hq, Sq, d]
+    k: jnp.ndarray,            # [B, Hkv, Sk, d]
+    v: jnp.ndarray,            # [B, Hkv, Sk, d]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Blockwise attention; falls back to the jnp oracle when
+    ``use_kernel=False`` (useful on backends without Pallas)."""
+    if not use_kernel:
+        from .ref import attention_ref
+        return attention_ref(q, k, v, causal=causal)
+
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    bq = min(block_q, _pad_target(sq, block_q))
+    bk = min(block_k, _pad_target(sk, block_k))
+    sq_p = _round_up(sq, bq)
+    sk_p = _round_up(sk, bk)
+
+    qp = _pad_seq(q, sq_p).reshape(b * hq, sq_p, d)
+    kp = _pad_seq(k, sk_p).reshape(b * hkv, sk_p, d)
+    vp = _pad_seq(v, sk_p).reshape(b * hkv, sk_p, d)
+
+    out = flash_attention_bh(
+        qp, kp, vp,
+        h_q=hq, h_kv=hkv, causal=causal,
+        block_q=bq, block_k=bk, sk_valid=sk,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq_p, d)[:, :, :sq]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_target(s: int, block: int) -> int:
+    """Smallest usable block size for short sequences (power-of-two ≥ 8)."""
+    t = 8
+    while t < min(s, block):
+        t *= 2
+    return t
+
+
+def _pad_seq(x: jnp.ndarray, s_target: int) -> jnp.ndarray:
+    s = x.shape[2]
+    if s == s_target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[2] = (0, s_target - s)
+    return jnp.pad(x, pad)

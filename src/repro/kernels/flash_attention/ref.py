@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/full, length-masked)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,            # [B, Hq, Sq, d]
+    k: jnp.ndarray,            # [B, Hkv, Sk, d]
+    v: jnp.ndarray,            # [B, Hkv, Sk, d]
+    *,
+    causal: bool,
+    scale: float | None = None,
+    sk_valid: int | None = None,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    sk_valid = sk if sk_valid is None else sk_valid
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(sk)[None, :] < sk_valid
+    if causal:
+        mask = mask & (jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None])
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

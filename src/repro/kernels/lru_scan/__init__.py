@@ -1,0 +1,3 @@
+from .ops import lru_scan
+
+__all__ = ["lru_scan"]

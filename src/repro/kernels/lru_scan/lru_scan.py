@@ -1,0 +1,78 @@
+"""RG-LRU gated linear recurrence kernel (RecurrentGemma).
+
+    h_t = a_t ⊙ h_{t−1} + b_t            a, b, h ∈ ℝ^D
+
+Chunked PEMS-style: the sequence streams HBM→VMEM in chunks; the carried
+state ``h`` is the resident context (VMEM scratch persisting across the
+sequential chunk grid dimension).  Within a chunk the scan runs as a
+log₂(C)-step Blelloch doubling on vector registers — no sequential lane
+dependence.
+
+Grid: (B, S/C) with the chunk index innermost (TPU grids iterate the last
+dimension sequentially, so the scratch carry is well-defined).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_scan(a, b):
+    """Inclusive scan of the affine composition (a, b) along axis 0 via
+    doubling: (a1,b1)∘(a2,b2) = (a1·a2, b1·a2 + b2)."""
+    c = a.shape[0]
+    s = 1
+    while s < c:
+        a_prev = jnp.concatenate([jnp.ones_like(a[:s]), a[:-s]], axis=0)
+        b_prev = jnp.concatenate([jnp.zeros_like(b[:s]), b[:-s]], axis=0)
+        mask = (jax.lax.broadcasted_iota(jnp.int32, a.shape, 0) >= s)
+        a, b = (
+            jnp.where(mask, a_prev * a, a),
+            jnp.where(mask, b_prev * a + b, b),
+        )
+        s *= 2
+    return a, b
+
+
+def _lru_kernel(a_ref, b_ref, o_ref, h_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # [C, D]
+    b = b_ref[0].astype(jnp.float32)
+    acc_a, acc_b = _chunk_scan(a, b)
+    h0 = h_ref[...]
+    h = acc_a * h0[None, :] + acc_b        # [C, D]
+    h_ref[...] = h[-1]
+    o_ref[0] = h.astype(o_ref.dtype)
+
+
+def lru_scan_chunked(
+    a: jnp.ndarray,             # [B, S, D] gates in (0, 1)
+    b: jnp.ndarray,             # [B, S, D] inputs
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, s, d = a.shape
+    assert s % chunk == 0, (s, chunk)
+    return pl.pallas_call(
+        _lru_kernel,
+        grid=(bsz, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), a.dtype),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,35 @@
+"""Public wrapper for the RG-LRU scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .lru_scan import lru_scan_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def lru_scan(a: jnp.ndarray, b: jnp.ndarray, *, chunk: int = 256,
+             interpret: bool = False, use_kernel: bool = True) -> jnp.ndarray:
+    """Gated linear recurrence h_t = a_t⊙h_{t−1} + b_t over [B, S, D]."""
+    if not use_kernel:
+        from .ref import lru_scan_ref
+        return lru_scan_ref(a, b)
+    bsz, s, d = a.shape
+    c = min(chunk, _next_pow2(s))
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0)]
+        a = jnp.pad(a, pad, constant_values=1.0)   # identity gate
+        b = jnp.pad(b, pad)
+    out = lru_scan_chunked(a, b, chunk=c, interpret=interpret)
+    return out[:, :s]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

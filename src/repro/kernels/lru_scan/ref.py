@@ -1,0 +1,18 @@
+"""Sequential oracle for the gated linear recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t over axis 1 of [B, S, D]; h_{-1} = 0."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    a32 = a.astype(jnp.float32).swapaxes(0, 1)
+    b32 = b.astype(jnp.float32).swapaxes(0, 1)
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)  # [B, D]
+    _, hs = jax.lax.scan(step, h0, (a32, b32))
+    return hs.swapaxes(0, 1).astype(a.dtype)

@@ -1,0 +1,38 @@
+"""Public wrapper for the SSD scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False,
+             use_kernel: bool = True):
+    """Mamba-2 SSD scan; pads the sequence to a chunk multiple (padded steps
+    use dt=0, which is the identity transition)."""
+    if not use_kernel:
+        from .ref import ssd_scan_ref
+        return ssd_scan_ref(x, dt, A, Bm, Cm)
+    bsz, h, s, p = x.shape
+    c = min(chunk, _next_pow2(s))
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        d = s_pad - s
+        x = jnp.pad(x, [(0, 0), (0, 0), (0, d), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, 0), (0, d)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, d), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, d), (0, 0)])
+    out = ssd_scan_chunked(x, dt, A, Bm, Cm, chunk=c, interpret=interpret)
+    return out[:, :, :s]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

@@ -1,0 +1,34 @@
+"""Sequential oracle for the SSD recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """x [B,H,S,P], dt [B,H,S], A [H], Bm/Cm [B,S,N] → y [B,H,S,P]."""
+    bsz, h, s, p = x.shape
+    n = Bm.shape[-1]
+
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+    B32 = Bm.astype(jnp.float32)
+    C32 = Cm.astype(jnp.float32)
+
+    def step(S, t):
+        xt = x32[:, :, t]                       # [B, H, P]
+        dtt = dt32[:, :, t]                     # [B, H]
+        bt = B32[:, t]                          # [B, N]
+        ct = C32[:, t]                          # [B, N]
+        decay = jnp.exp(A32[None, :] * dtt)     # [B, H]
+        S = decay[..., None, None] * S + (
+            dtt[..., None, None]
+            * bt[:, None, :, None]
+            * xt[:, :, None, :]
+        )                                        # [B, H, N, P]
+        yt = jnp.einsum("bn,bhnp->bhp", ct, S)
+        return S, yt
+
+    S0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)  # [B, H, S, P]

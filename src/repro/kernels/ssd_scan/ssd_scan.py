@@ -1,0 +1,105 @@
+"""Mamba-2 SSD (state-space duality) chunked scan kernel.
+
+Per head, state S ∈ ℝ^{P×N}:
+
+    S_t = exp(A·dt_t)·S_{t−1} + dt_t·x_t ⊗ B_t
+    y_t = S_t·C_t  (+ D·x_t applied in ops.py)
+
+The SSD chunk decomposition (Dao & Gu 2024) splits the sequence into chunks
+of length C: the *intra-chunk* term is a masked quadratic form
+(C·Bᵀ ⊙ decay) @ x — MXU matmuls — and the *inter-chunk* term propagates the
+carried state.  That carried state is the PEMS context: it stays resident in
+VMEM scratch while sequence chunks stream HBM→VMEM, one grid step per chunk.
+
+Grid: (B, H, S/C), chunk innermost (sequential on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+                chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # [C, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)      # [C]
+    A = a_ref[0].astype(jnp.float32)           # scalar (per head), A < 0
+    Bm = b_ref[0].astype(jnp.float32)          # [C, N]
+    Cm = c_ref[0].astype(jnp.float32)          # [C, N]
+
+    cdt = jnp.cumsum(dt)                       # [C] cumulative Δt
+    # Intra-chunk quadratic form: W_ti = (C_t·B_i) · exp(A(cdt_t−cdt_i)) · dt_i,
+    # lower-triangular.
+    G = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [C, C]
+    seg = A * (cdt[:, None] - cdt[None, :])     # [C, C]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = row >= col
+    M = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    W = G * M * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [C, P]
+
+    # Inter-chunk: y_t += exp(A·cdt_t) · (C_t · S_carry)
+    S0 = s_ref[...]                             # [N, P]
+    decay_t = jnp.exp(A * cdt)                  # [C]
+    y_carry = decay_t[:, None] * jax.lax.dot_general(
+        Cm, S0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [C, P]
+
+    y_ref[0, 0] = (y_intra + y_carry).astype(y_ref.dtype)
+
+    # State update: S' = exp(A·cdt_C)·S + Σ_i exp(A(cdt_C−cdt_i))·dt_i·B_i⊗x_i
+    wt = jnp.exp(A * (cdt[-1] - cdt)) * dt      # [C]
+    S_new = jnp.exp(A * cdt[-1]) * S0 + jax.lax.dot_general(
+        Bm * wt[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # [N, P]
+    s_ref[...] = S_new
+
+
+def ssd_scan_chunked(
+    x: jnp.ndarray,             # [B, H, S, P]
+    dt: jnp.ndarray,            # [B, H, S]   (post-softplus, > 0)
+    A: jnp.ndarray,             # [H]         (negative)
+    Bm: jnp.ndarray,            # [B, S, N]   (ngroups = 1, shared over heads)
+    Cm: jnp.ndarray,            # [B, S, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, h, s, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bsz, h, s // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b, hh, j: (b, hh, j, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, hh, j: (b, hh, j)),
+            pl.BlockSpec((1,), lambda b, hh, j: (hh,)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, hh, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda b, hh, j: (b, hh, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

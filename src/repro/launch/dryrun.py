@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, with NO real allocation (ShapeDtypeStruct inputs).
+
+For each cell this script records:
+  * ``memory_analysis()``  — bytes per device (proves fit / quantifies misfit)
+  * ``cost_analysis()``    — per-device FLOPs and bytes accessed (§Roofline)
+  * collective bytes parsed from the post-optimisation HLO
+  * the roofline terms and dominant bottleneck
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ARCH_NAMES, applicable_shapes, get_config, skip_reason
+from repro.data import DataConfig, make_batch_specs
+from repro.distributed.sharding import (
+    ShardingRules, batch_specs_sharded, cache_pspec, opt_pspecs, param_pspecs,
+)
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.models import Model
+from repro.optim import OptConfig, adamw_init
+from repro.roofline import HW, collective_bytes, roofline_terms
+from repro.train import TrainConfig, TrainState, init_train_state, make_train_step
+
+# Per-arch execution choices (documented in EXPERIMENTS.md §Dry-run).
+BIG_MOE = ("kimi-k2-1t-a32b", "arctic-480b")
+FSDP_ARCHS = BIG_MOE + ("qwen3-14b",)
+TRAIN_MICROBATCHES = 8
+
+
+def _attach(specs_tree, pspecs_tree, mesh):
+    def one(s, spec):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, specs_tree, pspecs_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, n_layers=None,
+               global_batch=None, microbatches=None, cfg_overrides=None):
+    """Returns (lower_fn, meta) for one (arch × shape) cell.
+
+    ``n_layers``/``global_batch``/``microbatches`` overrides exist for the
+    calibrated cost model (repro.roofline.calibrate): XLA's cost_analysis
+    counts loop bodies once, so per-layer / per-microbatch costs are probed
+    at two layer counts and two batch sizes and extrapolated linearly.
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if n_layers is not None:
+        cfg = _dc.replace(cfg, n_layers=n_layers)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    if global_batch is not None:
+        shape = _dc.replace(shape, global_batch=global_batch)
+    # NB (§Perf iteration #6, refuted): disabling FSDP at inference sounded
+    # free (no optimizer state to shard) but parameter *residency* still
+    # needs the data axis for the giants — kimi prefill went 80→443 GB/dev.
+    rules = ShardingRules(
+        mesh=mesh, data_axes=data_axes_of(mesh), fsdp=arch in FSDP_ARCHS)
+    if cfg.is_moe:
+        # Hierarchical MoE dispatch: one token group per DP shard keeps every
+        # dispatch intermediate sharded (DESIGN.md §3.1).
+        cfg = _dc.replace(cfg, moe_groups=rules.data_size)
+    model = Model(cfg)
+
+    if cfg.is_moe:
+        # §Perf iteration #9: the MoE group reshape otherwise steers the
+        # residual stream to replicated-batch layouts (arctic: 116→54 GB/dev).
+        # Dense archs are already well-placed — pinning them costs ~1 GB.
+        def _act_pin(x):
+            if x.ndim == 3 and x.shape[0] % rules.data_size == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(rules.data_axes, None, None)))
+            return x
+
+        model.act_constraint = _act_pin
+
+    rng = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(model.init, rng)
+    pspecs = param_pspecs(rules, params_s)
+    params_in = _attach(params_s, pspecs, mesh)
+
+    dcfg = DataConfig(
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+        vocab=cfg.vocab, frontend=cfg.frontend,
+        n_frontend_tokens=cfg.n_frontend_tokens, d_model=cfg.d_model)
+
+    n_params = sum(_size(l.shape) for l in jax.tree.leaves(params_s))
+    expert_params = sum(
+        _size(l.shape)
+        for path, l in jax.tree_util.tree_flatten_with_path(params_s)[0]
+        if "moe" in jax.tree_util.keystr(path)
+        and any(s in jax.tree_util.keystr(path) for s in ("w_in", "w_out")))
+    n_active = (n_params - expert_params
+                + expert_params * cfg.top_k / max(cfg.n_experts, 1))
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_params": int(n_params), "n_params_active": int(n_active),
+        "fsdp": rules.fsdp,
+    }
+
+    if shape.kind == "train":
+        ocfg = OptConfig(quantize_moments=arch in BIG_MOE,
+                         scan_stacked=arch in BIG_MOE + FSDP_ARCHS)
+        tcfg = TrainConfig(
+            opt=ocfg,
+            microbatches=(TRAIN_MICROBATCHES if microbatches is None
+                          else microbatches),
+            accum_dtype="bfloat16" if arch in BIG_MOE else "float32")
+        opt_s = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_s)
+        ospecs = opt_pspecs(rules, opt_s, params_s)
+        state_in = TrainState(
+            params=params_in,
+            opt=_attach(opt_s, ospecs, mesh),
+            ef=None)
+        batch_in = batch_specs_sharded(rules, make_batch_specs(dcfg))
+
+        def mb_shard(x):
+            spec = P(None, rules.data_axes,
+                     *(None,) * (x.ndim - 2))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+
+        step = make_train_step(model, tcfg, microbatch_sharding=mb_shard)
+        meta["optimizer"] = ("adamw-int8" if ocfg.quantize_moments
+                             else "adamw-f32")
+        meta["microbatches"] = tcfg.microbatches
+
+        def lower():
+            return jax.jit(step, donate_argnums=(0,)).lower(
+                state_in, batch_in)
+
+        # tokens processed per step (for MFU-style normalisation)
+        meta["tokens"] = shape.global_batch * shape.seq_len
+        return lower, meta
+
+    # serving shapes
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cspecs = cache_pspec(rules, cache_s)
+    cache_in = _attach(cache_s, cspecs, mesh)
+
+    if shape.kind == "prefill":
+        batch_in = batch_specs_sharded(rules, make_batch_specs(dcfg))
+
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        def lower():
+            return jax.jit(prefill, donate_argnums=(2,)).lower(
+                params_in, batch_in, cache_in)
+
+        meta["tokens"] = shape.global_batch * shape.seq_len
+        return lower, meta
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    tok_spec = P(rules.data_axes if b % rules.data_size == 0 else None, None)
+    tokens_in = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, tokens, pos, cache):
+        return model.decode(params, tokens, pos, cache)
+
+    def lower():
+        return jax.jit(decode, donate_argnums=(3,)).lower(
+            params_in, tokens_in, pos_in, cache_in)
+
+    meta["tokens"] = shape.global_batch
+    return lower, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: bool = False) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lower_fn, meta = build_cell(arch, shape_name, mesh)
+    lowered = lower_fn()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops, bytes_acc, coll["weighted_bytes"])
+
+    n_chips = 1
+    for v in meta["mesh"].values():
+        n_chips *= v
+    model_fl = (6.0 if meta["kind"] == "train" else 2.0) * \
+        meta["n_params_active"] * meta["tokens"]
+    device_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+
+    result = {
+        **meta,
+        "multi_pod": multi_pod,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_bytes": device_bytes,
+            "fits_hbm": bool(device_bytes <= HW["hbm_bytes"]),
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_per_device": bytes_acc},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_total": model_fl,
+        "model_flops_per_device": model_fl / n_chips,
+        "useful_flop_ratio": (model_fl / n_chips) / flops if flops else 0.0,
+    }
+    if save_hlo:
+        result["hlo_len"] = len(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape else list(SHAPES))
+        for sh in shapes:
+            reason = skip_reason(cfg, sh)
+            cells.append((arch, sh, reason))
+
+    if args.list:
+        for arch, sh, reason in cells:
+            print(f"{arch:24s} {sh:12s} {'SKIP: ' + reason if reason else 'RUN'}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    failures = 0
+    for arch, sh, reason in cells:
+        if reason:
+            out = {"arch": arch, "shape": sh, "skipped": reason}
+            _write(args.out, arch, sh, "any", out)
+            print(f"SKIP {arch} {sh}: {reason}")
+            continue
+        for mp in meshes[args.mesh]:
+            tag = "multi" if mp else "single"
+            try:
+                res = run_cell(arch, sh, mp)
+                _write(args.out, arch, sh, tag, res)
+                r = res["roofline"]
+                print(f"OK   {arch} {sh} [{tag}] compile={res['compile_s']}s "
+                      f"bytes/dev={res['memory']['per_device_bytes']/1e9:.2f}GB "
+                      f"dominant={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.3f}", flush=True)
+            except Exception as e:
+                failures += 1
+                _write(args.out, arch, sh, tag,
+                       {"arch": arch, "shape": sh, "mesh": tag,
+                        "error": str(e),
+                        "traceback": traceback.format_exc()})
+                print(f"FAIL {arch} {sh} [{tag}]: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+def _write(out, arch, sh, tag, payload):
+    fn = os.path.join(out, f"{arch}__{sh}__{tag}.json")
+    with open(fn, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def _size(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+if __name__ == "__main__":
+    main()

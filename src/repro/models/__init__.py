@@ -1,0 +1,6 @@
+"""Model zoo: one composable decoder/encoder covering all ten assigned
+architectures (dense GQA, MoE, SSD, RG-LRU hybrid, encoder-only, VLM)."""
+
+from .model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,474 @@
+"""Per-family layer blocks: GQA attention (w/ KV cache), MoE with PEMS-style
+capacity dispatch, Mamba-2 SSD, and RG-LRU recurrent blocks.
+
+Every block has ``<name>_params(rng, cfg)`` and a pure ``<name>_apply``; all
+are scan-compatible (stacked leading layer dim) and decode-capable (cache
+slices threaded through the scan).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, attention, mlp, mlp_params, rmsnorm, rope
+
+
+# =========================================================================== #
+# GQA attention block                                                          #
+# =========================================================================== #
+
+def attn_params(rng, cfg) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": _init(ks[0], (d, hq, dh), d, dt),
+        "wk": _init(ks[1], (d, hkv, dh), d, dt),
+        "wv": _init(ks[2], (d, hkv, dh), d, dt),
+        "wo": _init(ks[3], (hq, dh, d), hq * dh, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, dh), dt)
+        p["bk"] = jnp.zeros((hkv, dh), dt)
+        p["bv"] = jnp.zeros((hkv, dh), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dt)
+        p["k_norm"] = jnp.zeros((dh,), dt)
+    return p
+
+
+def attn_apply(
+    cfg,
+    p: dict,
+    x: jnp.ndarray,              # [B, S, d]
+    *,
+    window: int = 0,
+    prefix: int = 0,
+    cache: Optional[dict] = None,   # {"k","v": [B, Smax, Hkv, dh]}
+    cache_pos=None,                 # scalar position of x[:, 0]
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    offset = 0 if cache_pos is None else cache_pos
+    pos = offset + jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    if cache is None:
+        out = attention(
+            q, k, v, causal=cfg.causal, window=window, prefix=prefix,
+            chunk=cfg.attn_chunk,
+        )
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, offset, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, offset, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        out = attention(
+            q, ck, cv, causal=cfg.causal, window=window, prefix=prefix,
+            q_offset=offset, kv_valid=offset + s, chunk=cfg.attn_chunk,
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def attn_cache(cfg, batch: int, max_seq: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+# =========================================================================== #
+# MoE block — PEMS-style capacity dispatch                                     #
+# =========================================================================== #
+#
+# Experts are the thesis' virtual processors: tokens are bucketised by
+# destination expert with the same grouping primitive the BSP apps use
+# (group-by-destination + capacity ω), delivered "directly" into per-expert
+# buffers, processed expert-by-expert, and combined back.  Under expert
+# sharding the dispatch lowers to the all-to-all the thesis' Alltoallv
+# performs across real processors.
+
+def moe_params(rng, cfg) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.dtype)
+    gates = 1 if cfg.act == "gelu" else 2
+    p = {
+        "router": _init(ks[0], (d, e), d, jnp.float32),
+        "w_in": _init(ks[1], (e, d, gates, ff), d, dt),
+        "w_out": _init(ks[2], (e, ff, d), ff, dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(
+            ks[3], d, cfg.d_ff * cfg.n_shared_experts, cfg.act, dt)
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_params(
+            ks[4], d, cfg.moe_dense_d_ff or cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def moe_apply(cfg, p: dict, x: jnp.ndarray,
+              n_groups: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B, S, d], aux load-balance loss).
+
+    Hierarchical dispatch (the thesis' real/virtual processor split): tokens
+    are partitioned into ``n_groups`` data-parallel groups (one per DP shard);
+    each group bucketises its tokens by destination expert under a local
+    capacity ω and the grouped einsum runs with experts sharded on the model
+    axis.  Every intermediate keeps a leading group dim, so GSPMD keeps the
+    dispatch sharded — no T·K×d replicated scatter.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    n_groups = n_groups or getattr(cfg, "moe_groups", 1) or 1
+    n_groups = min(n_groups, t)
+    while t % n_groups:
+        n_groups -= 1
+    tg = t // n_groups
+    cap = max(1, int(math.ceil(tg * k / e * cfg.capacity_factor)))
+    xg = x.reshape(n_groups, tg, d)
+
+    def group_dispatch(xf):                                   # [tg, d]
+        logits = (xf.astype(jnp.float32) @ p["router"])       # [tg, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, sel = jax.lax.top_k(logits, k)             # [tg, K]
+        weights = jax.nn.softmax(gate_vals, axis=-1)
+
+        density = jnp.mean(
+            jax.nn.one_hot(sel[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.sum(density * probs.mean(axis=0))
+
+        flat_e = sel.reshape(-1)                              # [tg·K]
+        flat_w = weights.reshape(-1)
+        tok_of = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+
+        order = jnp.argsort(flat_e, stable=True)
+        se = flat_e[order]
+        start = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+        pos = jnp.arange(tg * k, dtype=jnp.int32) - start[se].astype(jnp.int32)
+        keep = pos < cap                                      # token dropping
+        pos_c = jnp.minimum(pos, cap - 1)
+
+        tok_sorted = tok_of[order]
+        w_sorted = flat_w[order]
+        xe = jnp.zeros((e, cap, d), x.dtype)
+        src = jnp.where(keep[:, None], xf[tok_sorted], 0)
+        xe = xe.at[se, pos_c].set(src.astype(x.dtype))
+        return xe, (se, pos_c, keep, tok_sorted, w_sorted, aux)
+
+    xe, (se, pos_c, keep, tok_sorted, w_sorted, aux) = jax.vmap(
+        group_dispatch)(xg)                                   # [G, E, cap, d]
+
+    # ---- expert compute (grouped matmul; experts on the model axis) --------
+    h = jnp.einsum("gecd,edGf->gecGf", xe, p["w_in"])
+    # dims: (group, E, cap, gates, ff)
+    if p["w_in"].shape[2] == 2:
+        gte = (jax.nn.silu(h[..., 0, :]) if cfg.act == "swiglu"
+               else jax.nn.gelu(h[..., 0, :]))
+        h = gte * h[..., 1, :]
+    else:
+        h = jax.nn.gelu(h[..., 0, :])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"])          # [G, E, cap, d]
+
+    # ---- combine (direct delivery back to token slots) ---------------------
+    def group_combine(ye_g, se_g, pos_g, keep_g, tok_g, w_g):
+        contrib = ye_g[se_g, pos_g] * (w_g * keep_g)[:, None].astype(ye_g.dtype)
+        return jnp.zeros((tg, d), ye_g.dtype).at[tok_g].add(contrib)
+
+    y = jax.vmap(group_combine)(ye, se, pos_c, keep, tok_sorted,
+                                w_sorted).reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + mlp(x, p["shared"], cfg.act)
+    if "dense" in p:
+        y = y + mlp(x, p["dense"], cfg.act)
+    return y.astype(x.dtype), aux.mean()
+
+
+def moe_apply_dense_oracle(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference combine-over-all-experts path (tests only — O(E) compute)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    gate_vals, sel = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(gate_vals, axis=-1)
+
+    h = jnp.einsum("td,edgf->tegf", xf, p["w_in"])
+    if p["w_in"].shape[2] == 2:
+        g = (jax.nn.silu(h[..., 0, :]) if cfg.act == "swiglu"
+             else jax.nn.gelu(h[..., 0, :]))
+        h = g * h[..., 1, :]
+    else:
+        h = jax.nn.gelu(h[..., 0, :])
+    ye = jnp.einsum("tef,efd->ted", h, p["w_out"])            # [T, E, d]
+
+    comb = jnp.zeros(logits.shape, ye.dtype)
+    comb = jax.vmap(lambda c, s_, w_: c.at[s_].set(w_.astype(ye.dtype))
+                    )(comb, sel, weights)
+    y = jnp.einsum("te,ted->td", comb, ye).reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(x, p["shared"], cfg.act)
+    if "dense" in p:
+        y = y + mlp(x, p["dense"], cfg.act)
+    return y.astype(x.dtype)
+
+
+# =========================================================================== #
+# Mamba-2 (SSD) block                                                          #
+# =========================================================================== #
+
+def mamba_params(rng, cfg) -> dict:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * n
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * n + h), d, dt),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_dim), cfg.ssm_conv, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.zeros((din,), dt),
+        "out_proj": _init(ks[2], (din, d), din, dt),
+    }
+
+
+def _ssd_chunked_jnp(x, dtv, A, Bm, Cm, chunk: int):
+    """Pure-jnp twin of the ssd_scan kernel: scan over chunks with the carried
+    state (identical math; used for XLA-only backends / dry-run lowering)."""
+    b, h, s, pdim = x.shape
+    n = Bm.shape[-1]
+    nc = -(-s // chunk)
+    sp = nc * chunk
+    if sp != s:
+        x = jnp.pad(x, [(0, 0), (0, 0), (0, sp - s), (0, 0)])
+        dtv = jnp.pad(dtv, [(0, 0), (0, 0), (0, sp - s)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, sp - s), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, sp - s), (0, 0)])
+
+    xc = x.reshape(b, h, nc, chunk, pdim).transpose(2, 0, 1, 3, 4)
+    dc = dtv.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    Bc = Bm.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    causal = row >= col
+
+    def step(S, inp):
+        xb, db, Bb, Cb = inp            # [b,h,C,p], [b,h,C], [b,C,n], [b,C,n]
+        cdt = jnp.cumsum(db, axis=-1)   # [b,h,C]
+        G = jnp.einsum("bin,bjn->bij", Cb, Bb)                  # [b,C,C]
+        seg = A[None, :, None, None] * (cdt[..., :, None] - cdt[..., None, :])
+        M = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        W = G[:, None] * M * db[..., None, :]                   # [b,h,C,C]
+        y_intra = jnp.einsum("bhij,bhjp->bhip", W, xb)
+        decay_t = jnp.exp(A[None, :, None] * cdt)               # [b,h,C]
+        y_carry = decay_t[..., None] * jnp.einsum(
+            "bin,bhnp->bhip", Cb, S)
+        wt = jnp.exp(A[None, :, None] * (cdt[..., -1:] - cdt)) * db
+        S_new = (jnp.exp(A[None, :] * cdt[..., -1])[..., None, None] * S
+                 + jnp.einsum("bin,bhip->bhnp", Bb, xb * wt[..., None]))
+        return S_new, y_intra + y_carry
+
+    S0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    S_fin, ys = jax.lax.scan(step, S0, (
+        xc.astype(jnp.float32), dc.astype(jnp.float32),
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32)))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, sp, pdim)
+    return y[:, :, :s], S_fin
+
+
+def mamba_apply(cfg, p: dict, x: jnp.ndarray, *,
+                cache: Optional[dict] = None,
+                cache_pos=None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    din, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cw = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * n]
+    dtv = zxbcdt[..., -h:].astype(jnp.float32)
+
+    if cache is None or s > 1:
+        # Causal depthwise conv over the sequence (prefill keeps the raw tail
+        # as the next conv window).
+        raw = xBC
+        pad = jnp.pad(xBC, [(0, 0), (cw - 1, 0), (0, 0)])
+        xBC = sum(pad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+        xBC = jax.nn.silu(xBC + p["conv_b"])
+        conv_tail = raw[:, -(cw - 1):] if cache is not None else None
+    else:
+        # Single-step (s == 1) conv using the cached window.
+        prev = cache["conv"]                         # [B, cw-1, conv_dim]
+        window = jnp.concatenate([prev, xBC], axis=1)
+        out = sum(window[:, i:i + 1] * p["conv_w"][i] for i in range(cw))
+        conv_tail = window[:, 1:]
+        xBC = jax.nn.silu(out + p["conv_b"])
+
+    xs = xBC[..., :din].reshape(b, s, h, pd).transpose(0, 2, 1, 3)  # [B,H,S,P]
+    Bm = xBC[..., din:din + n]
+    Cm = xBC[..., din + n:]
+    dtv = jax.nn.softplus(dtv + p["dt_bias"]).transpose(0, 2, 1)    # [B,H,S]
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None or s > 1:
+        y, S_fin = _ssd_chunked_jnp(
+            xs.astype(jnp.float32), dtv, A,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            chunk=min(128, max(16, s)),
+        )
+        new_state = (S_fin.astype(cache["ssm"].dtype)
+                     if cache is not None else None)
+    else:
+        S = cache["ssm"].astype(jnp.float32)        # [B, H, N, P]
+        dt1 = dtv[..., 0]                            # [B, H]
+        decay = jnp.exp(A[None] * dt1)               # [B, H]
+        x1 = xs[:, :, 0].astype(jnp.float32)         # [B, H, P]
+        B1 = Bm[:, 0].astype(jnp.float32)            # [B, N]
+        C1 = Cm[:, 0].astype(jnp.float32)
+        S = (decay[..., None, None] * S
+             + dt1[..., None, None] * B1[:, None, :, None] * x1[:, :, None, :])
+        y = jnp.einsum("bn,bhnp->bhp", C1, S)[:, :, None].transpose(0, 1, 2, 3)
+        y = y.reshape(b, h, 1, pd)
+        new_state = S.astype(cache["ssm"].dtype)
+
+    y = y + p["D"][None, :, None, None] * xs.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    new_cache = (None if cache is None
+                 else {"ssm": new_state, "conv": conv_tail})
+    return out, new_cache
+
+
+def mamba_cache(cfg, batch: int) -> dict:
+    din, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_headdim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+# =========================================================================== #
+# RG-LRU recurrent block (RecurrentGemma / Griffin)                            #
+# =========================================================================== #
+
+_RG_C = 8.0
+
+
+def rglru_params(rng, cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(rng, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_x": _init(ks[0], (d, w), d, dt),
+        "in_gate": _init(ks[1], (d, w), d, dt),
+        "conv_w": _init(ks[2], (4, w), 4, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": _init(ks[3], (w, w), w, dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": _init(ks[4], (w, w), w, dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 2.0, jnp.float32),   # Λ: a ≈ 0.96^r at init
+        "out": _init(ks[5], (w, d), w, dt),
+    }
+
+
+def _lru_chunked_jnp(a, b, chunk: int):
+    """Pure-jnp twin of the lru_scan kernel (chunked doubling scan)."""
+    bsz, s, d = a.shape
+    nc = -(-s // chunk)
+    sp = nc * chunk
+    if sp != s:
+        a = jnp.pad(a, [(0, 0), (0, sp - s), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, sp - s), (0, 0)])
+    ac = a.reshape(bsz, nc, chunk, d).swapaxes(0, 1)
+    bc = b.reshape(bsz, nc, chunk, d).swapaxes(0, 1)
+
+    def step(h, inp):
+        av, bv = inp
+        sft = 1
+        while sft < chunk:
+            a_prev = jnp.concatenate(
+                [jnp.ones_like(av[:, :sft]), av[:, :-sft]], axis=1)
+            b_prev = jnp.concatenate(
+                [jnp.zeros_like(bv[:, :sft]), bv[:, :-sft]], axis=1)
+            mask = (jnp.arange(chunk) >= sft)[None, :, None]
+            av, bv = (jnp.where(mask, a_prev * av, av),
+                      jnp.where(mask, b_prev * av + bv, bv))
+            sft *= 2
+        hs = av * h[:, None] + bv
+        return hs[:, -1], hs
+
+    h0 = jnp.zeros((bsz, a.shape[-1]), jnp.float32)
+    h_fin, ys = jax.lax.scan(step, h0, (ac.astype(jnp.float32),
+                                        bc.astype(jnp.float32)))
+    return ys.swapaxes(0, 1).reshape(bsz, sp, d)[:, :s], h_fin
+
+
+def rglru_apply(cfg, p: dict, x: jnp.ndarray, *,
+                cache: Optional[dict] = None,
+                cache_pos=None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    w = cfg.lru_width
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_gate"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+
+    cw = 4
+    if cache is None or s > 1:
+        pad = jnp.pad(xr, [(0, 0), (cw - 1, 0), (0, 0)])
+        xc = sum(pad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+        xc = xc + p["conv_b"]
+        conv_tail = xr[:, -(cw - 1):] if cache is not None else None
+    else:
+        window = jnp.concatenate([cache["conv"], xr], axis=1)
+        xc = sum(window[:, i:i + 1] * p["conv_w"][i] for i in range(cw))
+        xc = xc + p["conv_b"]
+        conv_tail = window[:, 1:]
+
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xc, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xc, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i * xc.astype(jnp.float32))
+
+    if cache is None or s > 1:
+        h, h_fin = _lru_chunked_jnp(a, gated_x, chunk=min(256, max(16, s)))
+        new_cache = (None if cache is None else
+                     {"h": h_fin.astype(jnp.float32), "conv": conv_tail})
+    else:
+        h = a * cache["h"][:, None].astype(jnp.float32) + gated_x
+        new_cache = {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+
+    out = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", out, p["out"]), new_cache
+
+
+def rglru_cache(cfg, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), jnp.dtype(cfg.dtype)),
+    }

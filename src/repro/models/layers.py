@@ -1,0 +1,207 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention (chunked
+streaming softmax for long sequences), gated MLPs.
+
+All parameters are plain dicts of jnp arrays; all functions are pure.  The
+streaming attention is the XLA twin of the Pallas flash kernel (same running
+(m, l, acc) math) so the 32k/500k dry-run shapes never materialise an S×S
+score matrix.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# Norms / RoPE                                                                 #
+# --------------------------------------------------------------------------- #
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, d]; positions [..., S] (broadcastable int32)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Attention                                                                    #
+# --------------------------------------------------------------------------- #
+
+def _mask_block(q_pos, k_pos, *, causal: bool, window: int, prefix: int):
+    """Boolean mask [bq, bk] for absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        c = k_pos[None, :] <= q_pos[:, None]
+        if prefix > 0:
+            c = c | (k_pos[None, :] < prefix)
+        m = m & c
+    if window > 0:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def attention(
+    q: jnp.ndarray,            # [B, Sq, Hq, d]
+    k: jnp.ndarray,            # [B, Sk, Hkv, d]
+    v: jnp.ndarray,            # [B, Sk, Hkv, d]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix: int = 0,
+    q_offset=0,                # absolute position of q[0] (int or traced)
+    kv_valid=None,             # dynamic valid KV length (decode)
+    chunk: int = 0,            # 0 → unchunked
+) -> jnp.ndarray:
+    """GQA attention over [B, S, H, d] layouts.  ``chunk > 0`` streams KV (and
+    Q for training shapes) so peak memory is O(S·chunk)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    if chunk and sk > chunk:
+        return _attention_chunked(
+            q, k, v, causal=causal, window=window, prefix=prefix,
+            q_offset=q_offset, kv_valid=kv_valid, chunk=chunk, scale=scale,
+        )
+
+    qh = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                       prefix=prefix)
+    if kv_valid is not None:
+        mask = mask & (k_pos[None, :] < kv_valid)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def _attention_chunked(q, k, v, *, causal, window, prefix, q_offset, kv_valid,
+                       chunk, scale):
+    """Streaming-softmax attention: scan over KV chunks (and over Q chunks
+    when Sq is large) with running (m, l, acc) — flash attention in XLA."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+
+    n_kc = -(-sk // chunk)
+    sk_pad = n_kc * chunk
+    if sk_pad != sk:
+        k = jnp.pad(k, [(0, 0), (0, sk_pad - sk), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, sk_pad - sk), (0, 0), (0, 0)])
+    kc = k.reshape(b, n_kc, chunk, hkv, d)
+    vc = v.reshape(b, n_kc, chunk, hkv, d)
+    valid = jnp.minimum(kv_valid, sk) if kv_valid is not None else sk
+
+    def q_block(qb, q_pos):
+        # Keep q/k/v in their storage dtype (bf16): any resharding collective
+        # GSPMD inserts then moves half the bytes; the dots still accumulate
+        # in f32 via preferred_element_type (§Perf iteration #7).
+        qb = qb.reshape(b, -1, hkv, group, d)
+        sq_b = qb.shape[1]
+
+        # Rematerialise each KV chunk's scores in the backward pass instead of
+        # saving the O(S·chunk) score/probability matrices of every step.
+        @jax.checkpoint
+        def step(carry, inp):
+            m, l, acc = carry
+            kb, vb, j = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = j * chunk + jnp.arange(chunk)
+            mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix=prefix)
+            mask = mask & (k_pos[None, :] < valid)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, group, sq_b), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, sq_b), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, sq_b, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_kc)),
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None])                       # [b,hkv,g,sq_b,d]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq_b, hq, d)
+
+    if sq <= chunk:
+        q_pos = q_offset + jnp.arange(sq)
+        return q_block(q, q_pos).astype(q.dtype)
+
+    n_qc = -(-sq // chunk)
+    sq_pad = n_qc * chunk
+    if sq_pad != sq:
+        q = jnp.pad(q, [(0, 0), (0, sq_pad - sq), (0, 0), (0, 0)])
+    qcs = q.reshape(b, n_qc, chunk, hq, d).swapaxes(0, 1)
+
+    def qstep(_, inp):
+        qb, i = inp
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        return None, q_block(qb, q_pos)
+
+    _, outs = jax.lax.scan(qstep, None, (qcs, jnp.arange(n_qc)))
+    out = outs.swapaxes(0, 1).reshape(b, sq_pad, hq, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs                                                                         #
+# --------------------------------------------------------------------------- #
+
+def mlp(x: jnp.ndarray, p: dict, act: str) -> jnp.ndarray:
+    """Gated (swiglu/geglu) or plain-gelu MLP; params:
+    gated: {w_in [d, 2, ff], w_out [ff, d]}; plain: {w_in [d, 1, ff], w_out}."""
+    w_in, w_out = p["w_in"], p["w_out"]
+    h = jnp.einsum("...d,dgf->...gf", x, w_in)
+    if w_in.shape[1] == 2:
+        gate, up = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        h = g * up
+    else:
+        h = jax.nn.gelu(h[..., 0, :])
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+def mlp_params(rng, d: int, ff: int, act: str, dtype) -> dict:
+    gates = 1 if act == "gelu" else 2
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_in": _init(k1, (d, gates, ff), d, dtype),
+        "w_out": _init(k2, (ff, d), ff, dtype),
+    }
+
+
+def _init(rng, shape, fan_in, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32)
+            / math.sqrt(fan_in)).astype(dtype)

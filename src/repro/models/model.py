@@ -1,0 +1,338 @@
+"""The composable model: one class covering all ten assigned architectures.
+
+Layer stacks are *scanned* (stacked parameter pytrees + ``lax.scan``) so HLO
+size and compile time are depth-independent — essential for the 61-layer MoE
+dry-runs.  Heterogeneous stacks (kimi's leading dense layer, recurrentgemma's
+(rec, rec, attn) pattern groups) scan the homogeneous part and apply the
+remainder unstacked.
+
+API (all pure functions of params):
+  init(rng) → params                      (works under jax.eval_shape)
+  loss(params, batch) → (loss, metrics)   train forward
+  init_cache(batch, max_seq) → cache
+  prefill(params, batch, cache) → (logits_last, cache)
+  decode(params, tokens, pos, cache) → (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .blocks import (
+    attn_apply, attn_cache, attn_params,
+    mamba_apply, mamba_cache, mamba_params,
+    moe_apply, moe_params,
+    rglru_apply, rglru_cache, rglru_params,
+)
+from .layers import _init, mlp, mlp_params, rmsnorm
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # Optional activation-sharding pin applied to the residual stream at
+        # every layer boundary (set by the launcher, which knows the mesh).
+        # Without it GSPMD can let the MoE group reshape steer the whole
+        # residual stream to replicated-batch layouts (§Perf iteration #9).
+        self.act_constraint = None
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        ks = jax.random.split(rng, 8)
+        params: Dict = {
+            "embed": _init(ks[0], (cfg.vocab, cfg.d_model), cfg.d_model, dt),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = _init(
+                ks[1], (cfg.d_model, cfg.vocab), cfg.d_model, dt)
+        if cfg.frontend == "frames":
+            params["frontend_proj"] = _init(
+                ks[2], (cfg.d_model, cfg.d_model), cfg.d_model, dt)
+
+        if cfg.family == "ssm":
+            params["layers"] = _stack_init(
+                ks[3], cfg.n_layers, lambda r: self._ssm_layer(r))
+        elif cfg.family == "hybrid":
+            n_grp, rem = self._hybrid_split()
+            params["layers"] = _stack_init(
+                ks[3], n_grp, lambda r: self._hybrid_group(r))
+            if rem:
+                params["extra"] = _stack_init(
+                    ks[4], rem, lambda r: self._rec_layer(r))
+        else:
+            n_dense = cfg.first_dense_layers
+            n_stack = cfg.n_layers - n_dense
+            params["layers"] = _stack_init(
+                ks[3], n_stack, lambda r: self._tf_layer(r, moe=cfg.is_moe))
+            if n_dense:
+                params["dense0"] = _stack_init(
+                    ks[4], n_dense, lambda r: self._tf_layer(r, moe=False))
+        return params
+
+    # layer param builders ---------------------------------------------------
+    def _tf_layer(self, rng, *, moe: bool) -> Dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        dt = jnp.dtype(cfg.dtype)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": attn_params(k1, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+        }
+        if moe:
+            p["moe"] = moe_params(k2, cfg)
+        else:
+            ff = cfg.moe_dense_d_ff or cfg.d_ff
+            p["mlp"] = mlp_params(k2, cfg.d_model, ff, cfg.act, dt)
+        return p
+
+    def _rec_layer(self, rng) -> Dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "rec": rglru_params(k1, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, dt),
+        }
+
+    def _ssm_layer(self, rng) -> Dict:
+        cfg = self.cfg
+        return {
+            "ln": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+            "mamba": mamba_params(rng, cfg),
+        }
+
+    def _hybrid_group(self, rng) -> Dict:
+        ks = jax.random.split(rng, len(self.cfg.block_pattern))
+        grp = {}
+        for i, (kind, kr) in enumerate(zip(self.cfg.block_pattern, ks)):
+            grp[f"b{i}"] = (self._rec_layer(kr) if kind == "rec"
+                            else self._tf_layer(kr, moe=False))
+        return grp
+
+    def _hybrid_split(self) -> Tuple[int, int]:
+        g = len(self.cfg.block_pattern)
+        return self.cfg.n_layers // g, self.cfg.n_layers % g
+
+    # --------------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, int]:
+        """Returns (x [B, S, d], prefix_len)."""
+        cfg = self.cfg
+        if cfg.frontend == "frames":
+            x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+            x = jnp.einsum("bsd,de->bse", x, params["frontend_proj"])
+            return x, 0
+        emb = params["embed"][batch["tokens"]]
+        if cfg.embed_scale:
+            emb = emb * jnp.asarray(
+                math.sqrt(cfg.d_model), emb.dtype)
+        if cfg.frontend == "patches" and "patches" in batch:
+            patches = batch["patches"].astype(emb.dtype)
+            x = jnp.concatenate([patches, emb], axis=1)
+            return x, cfg.n_frontend_tokens
+        return emb, 0
+
+    def _unembed(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        return jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+
+    def _layer_fwd(self, lp, x, kind, *, prefix=0, cache=None, pos=None):
+        """One layer; returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "ssm":
+            h, nc = mamba_apply(cfg, lp["mamba"],
+                                rmsnorm(x, lp["ln"], cfg.norm_eps),
+                                cache=cache, cache_pos=pos)
+            return x + h, nc, aux
+        if kind == "rec":
+            h, nc = rglru_apply(cfg, lp["rec"],
+                                rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                                cache=cache, cache_pos=pos)
+            x = x + h
+            x = x + mlp(rmsnorm(x, lp["ln2"], cfg.norm_eps), lp["mlp"], cfg.act)
+            return x, nc, aux
+        # transformer layer (attn + mlp/moe)
+        window = cfg.local_window if kind == "attn_local" else 0
+        h, nc = attn_apply(cfg, lp["attn"],
+                           rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                           window=window, prefix=prefix,
+                           cache=cache, cache_pos=pos)
+        x = x + h
+        y = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            h2, aux = moe_apply(cfg, lp["moe"], y)
+        else:
+            h2 = mlp(y, lp["mlp"], cfg.act)
+        return x + h2, nc, aux
+
+    def _run_stack(self, params, x, *, prefix=0, cache=None, pos=None):
+        """All layers; returns (x, new_cache, aux_sum)."""
+        cfg = self.cfg
+        new_cache: Dict = {}
+        aux_tot = jnp.zeros((), jnp.float32)
+
+        def scan_over(stack_p, kind, x, cache_stack):
+            nonlocal aux_tot
+
+            def f(carry, inp):
+                xc, auxc = carry
+                if self.act_constraint is not None:
+                    xc = self.act_constraint(xc)
+                if cache_stack is None:
+                    lp, c = inp, None
+                else:
+                    lp, c = inp
+                if kind == "group":
+                    nc = {}
+                    for i, bk in enumerate(cfg.block_pattern):
+                        key = f"b{i}"
+                        kk = "rec" if bk == "rec" else "attn_local"
+                        xc, nci, aux_i = self._layer_fwd(
+                            lp[key], xc, kk, prefix=prefix,
+                            cache=None if c is None else c[key], pos=pos)
+                        nc[key] = nci
+                        auxc = auxc + aux_i
+                else:
+                    xc, nc, aux_i = self._layer_fwd(
+                        lp, xc, kind, prefix=prefix, cache=c, pos=pos)
+                    auxc = auxc + aux_i
+                return (xc, auxc), nc
+
+            f_ = jax.checkpoint(f) if cfg.remat == "layer" else f
+            xs = stack_p if cache_stack is None else (stack_p, cache_stack)
+            if cfg.unroll_layers:
+                # Python-loop unroll: used by the calibrated cost model so
+                # per-layer FLOPs/bytes/collectives are visible in the HLO
+                # (XLA cost analysis counts while-loop bodies once).
+                n = jax.tree.leaves(stack_p)[0].shape[0]
+                carry = (x, aux_tot)
+                ncs_list = []
+                for i in range(n):
+                    xi = jax.tree.map(lambda a: a[i], xs)
+                    carry, nc = f_(carry, xi)
+                    ncs_list.append(nc)
+                (x, aux) = carry
+                ncs = (jax.tree.map(lambda *a: jnp.stack(a), *ncs_list)
+                       if ncs_list and ncs_list[0] is not None else None)
+            else:
+                (x, aux), ncs = jax.lax.scan(f_, (x, aux_tot), xs)
+            aux_tot = aux
+            return x, ncs
+
+        if cfg.family == "ssm":
+            x, nc = scan_over(params["layers"], "ssm", x,
+                              None if cache is None else cache["layers"])
+            new_cache["layers"] = nc
+        elif cfg.family == "hybrid":
+            x, nc = scan_over(params["layers"], "group", x,
+                              None if cache is None else cache["layers"])
+            new_cache["layers"] = nc
+            if "extra" in params:
+                x, nc2 = scan_over(params["extra"], "rec", x,
+                                   None if cache is None else cache["extra"])
+                new_cache["extra"] = nc2
+        else:
+            if "dense0" in params:
+                x, nc0 = scan_over(params["dense0"], "attn", x,
+                                   None if cache is None else cache["dense0"])
+                new_cache["dense0"] = nc0
+            x, nc = scan_over(params["layers"], "attn", x,
+                              None if cache is None else cache["layers"])
+            new_cache["layers"] = nc
+        return x, (new_cache if cache is not None else None), aux_tot
+
+    # ----------------------------------------------------------------- train
+    def logits(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        x, prefix = self._embed_inputs(params, batch)
+        x, _, aux = self._run_stack(params, x, prefix=prefix)
+        return self._unembed(params, x), aux
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        logits, aux = self.logits(params, batch)
+        if cfg.frontend == "frames":
+            labels = batch["labels"]
+            ce = _xent(logits, labels).mean()
+        else:
+            tokens = batch["tokens"]
+            txt_logits = logits[:, cfg.n_frontend_tokens:] \
+                if cfg.frontend == "patches" else logits
+            ce = _xent(txt_logits[:, :-1], tokens[:, 1:]).mean()
+        loss = ce + 1e-2 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ----------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        cache: Dict = {}
+        if cfg.family == "ssm":
+            cache["layers"] = _stack_cache(
+                cfg.n_layers, lambda: mamba_cache(cfg, batch))
+        elif cfg.family == "hybrid":
+            n_grp, rem = self._hybrid_split()
+
+            def group_cache():
+                g = {}
+                for i, bk in enumerate(cfg.block_pattern):
+                    g[f"b{i}"] = (rglru_cache(cfg, batch) if bk == "rec"
+                                  else attn_cache(cfg, batch, max_seq))
+                return g
+
+            cache["layers"] = _stack_cache(n_grp, group_cache)
+            if rem:
+                cache["extra"] = _stack_cache(
+                    rem, lambda: rglru_cache(cfg, batch))
+        else:
+            n_dense = cfg.first_dense_layers
+            if n_dense:
+                cache["dense0"] = _stack_cache(
+                    n_dense, lambda: attn_cache(cfg, batch, max_seq))
+            cache["layers"] = _stack_cache(
+                cfg.n_layers - n_dense,
+                lambda: attn_cache(cfg, batch, max_seq))
+        return cache
+
+    def prefill(self, params, batch, cache) -> Tuple[jnp.ndarray, Dict]:
+        x, prefix = self._embed_inputs(params, batch)
+        x, cache, _ = self._run_stack(params, x, prefix=prefix, cache=cache,
+                                      pos=jnp.int32(0))
+        return self._unembed(params, x[:, -1:]), cache
+
+    def decode(self, params, tokens, pos, cache) -> Tuple[jnp.ndarray, Dict]:
+        """One decode step: tokens [B, 1], pos scalar int32 (absolute)."""
+        emb = params["embed"][tokens]
+        if self.cfg.embed_scale:
+            emb = emb * jnp.asarray(math.sqrt(self.cfg.d_model), emb.dtype)
+        x, cache, _ = self._run_stack(params, emb, cache=cache, pos=pos)
+        return self._unembed(params, x), cache
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+def _stack_init(rng, n: int, one_fn):
+    return jax.vmap(one_fn)(jax.random.split(rng, n))
+
+
+def _stack_cache(n: int, one_fn):
+    one = one_fn()
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(),
+                        one)

@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update, OptConfig
+from .schedule import cosine_schedule
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "cosine_schedule"]

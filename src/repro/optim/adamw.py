@@ -1,0 +1,134 @@
+"""AdamW with optional int8-quantized moments.
+
+The int8 variant is the distributed-optimization trick that makes the
+trillion-parameter MoE configs trainable at all (DESIGN.md §6): m and v are
+stored as int8 with a per-tensor f32 scale (blockwise absmax), cutting
+optimizer-state HBM 4× and, with the PEMS host-offload driver, the stream
+volume 4×.  Dequant→update→requant happens inside the jitted step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False   # int8 m/v (for the giant MoE configs)
+    block: int = 2048                # quantization block size
+    # Scan the update over the leading (layer-stack) dim of big tensors so
+    # f32 dequant/update transients exist for one layer at a time — PEMS
+    # context swapping applied to the optimizer (§Perf iteration #5).
+    scan_stacked: bool = False
+    scan_min_dim: int = 8            # only scan leaves with shape[0] >= this
+
+
+def adamw_init(params, cfg: OptConfig) -> Dict:
+    def moment(p):
+        if cfg.quantize_moments:
+            # Shape-preserving int8 blocks along the last dim: q inherits the
+            # parameter's sharding exactly (no resharding in the update).
+            last = p.shape[-1] if p.ndim else 1
+            nb = -(-last // cfg.block)
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "scale": jnp.zeros(p.shape[:-1] + (nb,), jnp.float32),
+            }
+        return jnp.zeros_like(p, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(moment, params),
+        "v": jax.tree.map(moment, params),
+    }
+
+
+def _blocked(x: jnp.ndarray, block: int):
+    last = x.shape[-1]
+    nb = -(-last // block)
+    pad = nb * block - last
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (nb, block)), last
+
+
+def _dequant(q: Dict, shape, block: int) -> jnp.ndarray:
+    qb, last = _blocked(q["q"].astype(jnp.float32), block)
+    x = qb * q["scale"][..., None] / 127.0
+    x = x.reshape(x.shape[:-2] + (-1,))[..., :last]
+    return x.reshape(shape)
+
+
+def _quant(x: jnp.ndarray, block: int) -> Dict:
+    xb, last = _blocked(x, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1)
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    qb = jnp.clip(jnp.round(xb / safe[..., None] * 127.0), -127, 127)
+    q = qb.reshape(qb.shape[:-2] + (-1,))[..., :last].reshape(x.shape)
+    return {"q": q.astype(jnp.int8), "scale": scale}
+
+
+def adamw_update(params, grads, state: Dict, cfg: OptConfig,
+                 lr_scale=1.0) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.lr * lr_scale
+
+    # Global-norm gradient clip.
+    gsq = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m_f = _dequant(m, p.shape, cfg.block)
+            v_f = _dequant(v, p.shape, cfg.block)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mh = m_f / bc1
+        vh = v_f / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + (
+            cfg.weight_decay * p.astype(jnp.float32))
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if cfg.quantize_moments:
+            return p_new, _quant(m_f, cfg.block), _quant(v_f, cfg.block)
+        return p_new, m_f, v_f
+
+    def upd_leaf(p, g, m, v):
+        if (cfg.scan_stacked and p.ndim >= 3
+                and p.shape[0] >= cfg.scan_min_dim):
+            def body(_, slc):
+                return None, upd(*slc)
+            _, (p2, m2, v2) = jax.lax.scan(body, None, (p, g, m, v))
+            return p2, m2, v2
+        return upd(p, g, m, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd_leaf(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, {
+        "gnorm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,55 @@
+"""Shared helpers for BSP applications: destination grouping for Alltoallv
+message assembly (the "bucketising" every CGM algorithm performs)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def group_by_dest(
+    values: jnp.ndarray,      # [n] or [n, w] payloads
+    dests: jnp.ndarray,       # [n] int32 destination VP ids in [0, v)
+    v: int,
+    cap: int,
+    fill=0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pack per-element payloads into per-destination message slots.
+
+    Returns ``(msgs [v, cap(, w)], counts [v], slot_pos [n], ok)`` where
+    ``slot_pos[i]`` is the position of element ``i`` inside message
+    ``msgs[dests[i]]`` (needed to route responses back), and ``ok`` is False
+    if any destination received more than ``cap`` elements (capacity
+    overflow — the caller's ω bound was violated)."""
+    n = dests.shape[0]
+    order = jnp.argsort(dests, stable=True)
+    sorted_d = dests[order]
+    # Start offset of each destination group in the sorted order.
+    start = jnp.searchsorted(sorted_d, jnp.arange(v, dtype=dests.dtype))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - start[sorted_d].astype(jnp.int32)
+    counts = jnp.bincount(dests, length=v).astype(jnp.int32)
+    ok = counts.max() <= cap
+
+    payload = values if values.ndim > 1 else values[:, None]
+    w = payload.shape[1]
+    msgs = jnp.full((v, cap, w), fill, payload.dtype)
+    safe_pos = jnp.minimum(pos_sorted, cap - 1)  # clamp on overflow; ok=False
+    msgs = msgs.at[sorted_d, safe_pos].set(payload[order])
+
+    # slot position for each *original* element.
+    inv = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    slot_pos = safe_pos[inv]
+
+    if values.ndim == 1:
+        msgs = msgs[..., 0]
+    return msgs, counts, slot_pos, ok
+
+
+def take_from_slots(msgs: jnp.ndarray, dests: jnp.ndarray,
+                    slot_pos: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`group_by_dest` for response routing: element ``i``'s
+    response is ``msgs[dests[i], slot_pos[i]]``."""
+    return msgs[dests, slot_pos]

@@ -1,0 +1,101 @@
+"""Euler tour of a rooted forest on PEMS (thesis §8.4.3, CGMLib app).
+
+Pipeline (each EM-heavy stage is a PEMS program, composed exactly like the
+CGMLib application composes its sort and list-ranking primitives):
+
+  1. **PSRS sort** of (parent, child) keys → children of every node become
+     contiguous, globally ordered (the doubled-edge adjacency of Fig 8.22).
+  2. Decode first-child / next-sibling pointers (local index arithmetic).
+  3. Build the Euler successor function over directed-edge IDs
+     (down-edge of i = 2i, up-edge = 2i+1):
+        succ(2i)   = 2·firstchild(i)          if i has children else 2i+1
+        succ(2i+1) = 2·nextsibling(i)         if it exists
+                   = terminal                 if parent(i) is a root
+                   = 2·parent(i)+1            otherwise
+  4. **List ranking** of succ → each edge's distance to its tour's end.
+
+Returns per-edge ranks; ordering a tree's edges by descending rank yields the
+Euler tour (Fig 8.23's visit order)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .list_ranking import list_rank
+from .psrs import psrs_sort
+
+
+def euler_tour(parent, v: int, k: int = 1, driver: str = "explicit",
+               mode: str = "direct"):
+    """Compute the Euler tour structure of a forest.
+
+    Args:
+      parent: [n] int array, ``parent[r] == r`` for roots; children are
+        ordered by node index.
+    Returns:
+      dict with ``succ`` ([2n] edge successor ids), ``rank`` ([2n] hops to
+      tour end), ``valid`` ([2n] bool, False for root pseudo-edges).
+    """
+    parent = np.asarray(parent, np.int64)
+    n = parent.shape[0]
+    is_root = parent == np.arange(n)
+
+    # ---- 1. sort (parent, child) pairs of real edges with PSRS ------------
+    child = np.arange(n)[~is_root]
+    keys = parent[~is_root] * n + child
+    # Pad to a multiple of v with +inf-like keys (sorted to the end).
+    pad = (-len(keys)) % v
+    if len(keys) + pad == 0:
+        pad = v
+    big = n * n + np.arange(pad)
+    keys_padded = np.concatenate([keys, big]).astype(np.int64)
+    if keys_padded.max() >= 2**31:
+        # 64-bit keys: sort (parent, child) lexicographically in two 32-bit
+        # passes would be needed; for the sizes exercised here pack fits.
+        raise ValueError("n too large for packed 32-bit PSRS keys")
+    sorted_keys = psrs_sort(keys_padded.astype(np.int32), v=v, k=k,
+                            driver=driver, mode=mode)
+    sorted_keys = np.asarray(sorted_keys, np.int64)[: len(keys)]
+
+    # ---- 2. first-child / next-sibling (local index arithmetic) -----------
+    sp = sorted_keys // n
+    sc = sorted_keys % n
+    firstchild = np.full(n, -1, np.int64)
+    nextsib = np.full(n, -1, np.int64)
+    if len(sc):
+        first_mask = np.ones(len(sc), bool)
+        first_mask[1:] = sp[1:] != sp[:-1]
+        firstchild[sp[first_mask]] = sc[first_mask]
+        same = sp[1:] == sp[:-1]
+        nextsib[sc[:-1][same]] = sc[1:][same]
+
+    # ---- 3. edge successor function ---------------------------------------
+    succ = np.arange(2 * n, dtype=np.int64)          # default: self (terminal)
+    nodes = np.arange(n)
+    nonroot = ~is_root
+    down = 2 * nodes[nonroot]
+    up = down + 1
+    has_child = firstchild[nodes[nonroot]] >= 0
+    succ[down] = np.where(has_child, 2 * firstchild[nodes[nonroot]], up)
+    has_sib = nextsib[nodes[nonroot]] >= 0
+    p = parent[nodes[nonroot]]
+    parent_is_root = is_root[p]
+    succ[up] = np.where(
+        has_sib,
+        2 * nextsib[nodes[nonroot]],
+        np.where(parent_is_root, up, 2 * p + 1),
+    )
+
+    # ---- 4. list-rank the tour ---------------------------------------------
+    pad2 = (-2 * n) % (2 * v)
+    succ_padded = np.concatenate(
+        [succ, 2 * n + np.arange(pad2)]
+    ).astype(np.int32)
+    rank = list_rank(succ_padded, v=v, k=k, driver=driver, mode=mode)
+    rank = rank[: 2 * n]
+
+    valid = np.zeros(2 * n, bool)
+    valid[down] = True
+    valid[up] = True
+    return {"succ": succ, "rank": rank, "valid": valid,
+            "firstchild": firstchild, "nextsib": nextsib}

@@ -1,0 +1,110 @@
+"""CGM list ranking on PEMS via pointer jumping (used by the Euler-tour
+application, thesis §8.4.3; CGMLib provides the same primitive).
+
+Each of ⌈log₂ n⌉ rounds is a request/response pair of Alltoallvs: every
+element asks the owner of its successor for ``(rank[succ], succ[succ])`` and
+then jumps.  Terminals are fixpoints (``succ[i] == i``); on convergence
+``rank[i]`` is the number of hops from i to its list's terminal — for a
+forest of lists every list is ranked independently (exactly what the Euler
+tour needs)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ContextLayout, Pems, PemsConfig
+from .common import group_by_dest
+
+
+def _build(v: int, k: int, n_v: int, rounds: int, driver: str, mode: str):
+    cap = n_v  # worst case: all of a VP's successors live on one owner
+    lo = (
+        ContextLayout()
+        .add("succ", (n_v,), jnp.int32)
+        .add("rank", (n_v,), jnp.int32)
+        .add("dest", (n_v,), jnp.int32)
+        .add("spos", (n_v,), jnp.int32)
+        .add("qs", (v, cap), jnp.int32)    # request send (global indices)
+        .add("qscnt", (v,), jnp.int32)
+        .add("qr", (v, cap), jnp.int32)    # request recv
+        .add("qrcnt", (v,), jnp.int32)
+        .add("as_", (v, cap, 2), jnp.int32)  # answer send (rank, succ)
+        .add("ascnt", (v,), jnp.int32)
+        .add("ar", (v, cap, 2), jnp.int32)   # answer recv
+        .add("arcnt", (v,), jnp.int32)
+    )
+    pems = Pems(PemsConfig(v=v, k=k, driver=driver), lo)
+
+    def make_requests(rho, ctx):
+        succ = ctx.get("succ")
+        dest = succ // n_v
+        msgs, counts, spos, _ = group_by_dest(succ, dest, v, cap)
+        return (ctx.set("qs", msgs).set("qscnt", counts)
+                .set("dest", dest).set("spos", spos))
+
+    def answer(rho, ctx):
+        req = ctx.get("qr")                    # [v, cap] global indices
+        cnt = ctx.get("qrcnt")
+        local = jnp.clip(req - rho * n_v, 0, n_v - 1)
+        r = ctx.get("rank")[local]             # [v, cap]
+        s = ctx.get("succ")[local]
+        ans = jnp.stack([r, s], axis=-1)
+        return ctx.set("as_", ans).set("ascnt", cnt)
+
+    def jump(rho, ctx):
+        ans = ctx.get("ar")                    # [v, cap, 2]
+        dest, spos = ctx.get("dest"), ctx.get("spos")
+        got = ans[dest, spos]                  # [n_v, 2]
+        succ = ctx.get("succ")
+        rank = ctx.get("rank")
+        gid = rho * n_v + jnp.arange(n_v, dtype=jnp.int32)
+        live = succ != gid
+        rank = jnp.where(live, rank + got[:, 0], rank)
+        succ = jnp.where(live, got[:, 1], succ)
+        return ctx.set("succ", succ).set("rank", rank)
+
+    def program(succ_blocks):
+        store = pems.init().with_field("succ", succ_blocks)
+        gid = jnp.arange(v * n_v, dtype=jnp.int32).reshape(v, n_v)
+        store = store.with_field(
+            "rank", (succ_blocks != gid).astype(jnp.int32)
+        )
+        for _ in range(rounds):
+            store = pems.superstep(store, make_requests,
+                                   reads=["succ"],
+                                   writes=["qs", "qscnt", "dest", "spos"])
+            store = pems.alltoallv(store, "qs", "qr", "qscnt", "qrcnt",
+                                   mode=mode)
+            store = pems.superstep(store, answer,
+                                   reads=["qr", "qrcnt", "rank", "succ"],
+                                   writes=["as_", "ascnt"])
+            store = pems.alltoallv(store, "as_", "ar", "ascnt", "arcnt",
+                                   mode=mode)
+            store = pems.superstep(store, jump,
+                                   reads=["ar", "dest", "spos", "succ", "rank"],
+                                   writes=["succ", "rank"])
+        return store.field("rank"), store.field("succ")
+
+    return pems, jax.jit(program)
+
+
+def list_rank(succ, v: int, k: int = 1, driver: str = "explicit",
+              mode: str = "direct", return_pems: bool = False):
+    """Rank the linked list(s) ``succ`` ([n] global successor indices,
+    terminals are self-loops).  Returns ``rank`` ([n]: hops to terminal)."""
+    succ = jnp.asarray(succ, jnp.int32)
+    n = succ.shape[0]
+    if n % v:
+        raise ValueError(f"n={n} must be divisible by v={v}")
+    n_v = n // v
+    rounds = max(1, math.ceil(math.log2(n)))
+    pems, program = _build(v, k, n_v, rounds, driver, mode)
+    rank, _ = program(succ.reshape(v, n_v))
+    rank = np.asarray(rank).reshape(-1)
+    if return_pems:
+        return rank, pems
+    return rank

@@ -1,0 +1,68 @@
+"""CGM inclusive prefix sum on PEMS (thesis §8.4.2).
+
+Three virtual supersteps: local total → Gather at root → root prefix-sums the
+v totals → Bcast offsets → local cumsum + offset.  Communication volume is
+O(v) independent of n, which is why this application benefits most from the
+``sliced`` driver (the data field is only touched in the first and last
+superstep — cf. Fig 8.14's flat mmap curves)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ContextLayout, Pems, PemsConfig
+
+
+def _build(v: int, k: int, n_v: int, driver: str):
+    lo = (
+        ContextLayout()
+        .add("x", (n_v,), jnp.int32)
+        .add("tot", (1,), jnp.int32)
+        .add("atot", (v, 1), jnp.int32)
+        .add("offs", (v,), jnp.int32)
+        .add("res", (n_v,), jnp.int32)
+    )
+    pems = Pems(PemsConfig(v=v, k=k, driver=driver), lo)
+
+    def local_total(rho, ctx):
+        return ctx.set("tot", ctx.get("x").sum()[None])
+
+    def root_prefix(rho, ctx):
+        tots = ctx.get("atot")[:, 0]
+        offs = jnp.cumsum(tots) - tots          # exclusive prefix of totals
+        return ctx.set("offs", offs)
+
+    def local_prefix(rho, ctx):
+        x = ctx.get("x")
+        off = ctx.get("offs")[rho]
+        return ctx.set("res", jnp.cumsum(x) + off)
+
+    def program(blocks):
+        store = pems.init().with_field("x", blocks)
+        store = pems.superstep(store, local_total,
+                               reads=["x"], writes=["tot"])
+        store = pems.gather(store, "tot", "atot", root=0)
+        store = pems.superstep(store, root_prefix,
+                               reads=["atot"], writes=["offs"])
+        store = pems.bcast(store, "offs", root=0)
+        store = pems.superstep(store, local_prefix,
+                               reads=["x", "offs"], writes=["res"])
+        return store.field("res")
+
+    return pems, jax.jit(program)
+
+
+def prefix_sum(x, v: int, k: int = 1, driver: str = "explicit",
+               return_pems: bool = False):
+    """Inclusive prefix sum of int32 ``x`` ([n], n divisible by v) on PEMS."""
+    x = jnp.asarray(x, jnp.int32)
+    n = x.shape[0]
+    if n % v:
+        raise ValueError(f"n={n} must be divisible by v={v}")
+    pems, program = _build(v, k, n // v, driver)
+    res = np.asarray(program(x.reshape(v, n // v))).reshape(-1)
+    if return_pems:
+        return res, pems
+    return res

@@ -1,0 +1,158 @@
+"""PSRS — Parallel Sorting by Regular Sampling (thesis Alg 8.3.1) on PEMS.
+
+Four virtual supersteps, exactly the thesis' structure:
+
+  1. local sort + choose v regular samples        (computation)
+  2. **Gather** all v² samples at the root
+  3. root sorts samples, picks v−1 splitters; **Bcast**
+  4. partition local data by splitters; **Alltoallv** counts + buckets
+  5. merge received buckets                        (computation)
+
+The final Alltoallv moves the entire data set — it dominates I/O, which is
+why PSRS is the thesis' flagship benchmark for direct vs indirect delivery.
+
+Duplicate keys are handled by lexicographic (value, global-index) splitters,
+which preserves the 2n/v per-receiver bound even for constant inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ContextLayout, Pems, PemsConfig
+from .common import INT_MAX, group_by_dest
+
+
+def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
+           mode: str, local_sort):
+    lo = (
+        ContextLayout()
+        .add("data", (n_v,), jnp.int32)
+        .add("samp", (v, 2), jnp.int32)        # (value, global index)
+        .add("allsamp", (v, v, 2), jnp.int32)
+        .add("gsplit", (v, 2), jnp.int32)
+        .add("bsend", (v, cap), jnp.int32)
+        .add("bscnt", (v,), jnp.int32)
+        .add("brecv", (v, cap), jnp.int32)
+        .add("brcnt", (v,), jnp.int32)
+        .add("result", (rcap,), jnp.int32)
+        .add("rcount", (1,), jnp.int32)
+        .add("oflow", (1,), jnp.int32)
+    )
+    pems = Pems(PemsConfig(v=v, k=k, driver=driver), lo)
+
+    def sort_and_sample(rho, ctx):
+        data = local_sort(ctx.get("data"))
+        # Regular sampling: positions ⌊j·n_v/v⌋, j = 0..v−1 (Shi & Schaeffer).
+        idx = (jnp.arange(v) * n_v) // v
+        gid = rho * n_v + idx.astype(jnp.int32)
+        samp = jnp.stack([data[idx], gid], axis=-1)
+        return ctx.set("data", data).set("samp", samp)
+
+    def pick_splitters(rho, ctx):
+        allsamp = ctx.get("allsamp").reshape(-1, 2)
+        order = jnp.lexsort((allsamp[:, 1], allsamp[:, 0]))
+        s = allsamp[order]
+        # Splitters at ranks (i+1)·v + v/2 − 1, i = 0..v−2; sentinel at end.
+        ii = (jnp.arange(v - 1) + 1) * v + v // 2 - 1
+        gs = jnp.concatenate(
+            [s[ii], jnp.array([[INT_MAX, INT_MAX]], jnp.int32)]
+        )
+        return ctx.set("gsplit", gs)
+
+    def partition(rho, ctx):
+        data = ctx.get("data")
+        gs = ctx.get("gsplit")
+        gid = rho * n_v + jnp.arange(n_v, dtype=jnp.int32)
+        sv, sg = gs[:-1, 0], gs[:-1, 1]        # v−1 splitters
+        # dest = #splitters (sv, sg) <= (x, gid) lexicographically.
+        le = (sv[None, :] < data[:, None]) | (
+            (sv[None, :] == data[:, None]) & (sg[None, :] <= gid[:, None])
+        )
+        dest = le.sum(axis=1).astype(jnp.int32)
+        msgs, counts, _, ok = group_by_dest(data, dest, v, cap, fill=INT_MAX)
+        return (
+            ctx.set("bsend", msgs)
+            .set("bscnt", counts)
+            .set("oflow", (~ok).astype(jnp.int32)[None])
+        )
+
+    def merge(rho, ctx):
+        recv = ctx.get("brecv")              # [v, cap]
+        cnt = ctx.get("brcnt")               # [v]
+        mask = jnp.arange(cap)[None, :] < cnt[:, None]
+        flat = jnp.where(mask, recv, INT_MAX).reshape(-1)
+        merged = local_sort(flat)[:rcap]
+        total = cnt.sum()
+        over = (total > rcap).astype(jnp.int32)
+        return (
+            ctx.set("result", merged)
+            .set("rcount", total[None].astype(jnp.int32))
+            .set("oflow", ctx.get("oflow") | over[None])
+        )
+
+    def program(data_blocks):               # [v, n_v] int32
+        store = pems.init().with_field("data", data_blocks)
+        store = pems.superstep(store, sort_and_sample,
+                               reads=["data"], writes=["data", "samp"])
+        store = pems.gather(store, "samp", "allsamp", root=0)
+        store = pems.superstep(store, pick_splitters,
+                               reads=["allsamp"], writes=["gsplit"])
+        store = pems.bcast(store, "gsplit", root=0)
+        store = pems.superstep(store, partition,
+                               reads=["data", "gsplit"],
+                               writes=["bsend", "bscnt", "oflow"])
+        store = pems.alltoallv(store, "bsend", "brecv", "bscnt", "brcnt",
+                               mode=mode)
+        store = pems.superstep(store, merge,
+                               reads=["brecv", "brcnt", "oflow"],
+                               writes=["result", "rcount", "oflow"])
+        return (store.field("result"), store.field("rcount"),
+                store.field("oflow"))
+
+    return pems, jax.jit(program)
+
+
+def psrs_sort(
+    keys,
+    v: int,
+    k: int = 1,
+    driver: str = "explicit",
+    mode: str = "direct",
+    cap: Optional[int] = None,
+    rcap: Optional[int] = None,
+    local_sort=jnp.sort,
+    return_pems: bool = False,
+):
+    """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
+
+    ``mode`` selects PEMS2 direct delivery or the PEMS1 indirect baseline for
+    the final Alltoallv; ``cap`` is the per-(sender,dest) message capacity ω
+    (defaults to the always-safe n/v) and ``rcap`` the per-receiver capacity
+    (defaults to the PSRS guarantee 2n/v).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    n = keys.shape[0]
+    if n % v:
+        raise ValueError(f"n={n} must be divisible by v={v}")
+    n_v = n // v
+    cap = n_v if cap is None else cap
+    rcap = 2 * n_v if rcap is None else rcap
+
+    pems, program = _build(v, k, n_v, cap, rcap, driver, mode, local_sort)
+    result, rcount, oflow = program(keys.reshape(v, n_v))
+    result = np.asarray(result)
+    rcount = np.asarray(rcount)[:, 0]
+    if np.asarray(oflow).any():
+        raise OverflowError(
+            "PSRS message capacity exceeded; raise cap/rcap "
+            f"(cap={cap}, rcap={rcap})"
+        )
+    out = np.concatenate([result[i, : rcount[i]] for i in range(v)])
+    if return_pems:
+        return out, pems
+    return out

@@ -1,0 +1,3 @@
+from .analyze import collective_bytes, roofline_terms, HW
+
+__all__ = ["HW", "collective_bytes", "roofline_terms"]

@@ -1,0 +1,185 @@
+"""Calibrated cost model: loop-aware FLOPs / bytes / collective volumes.
+
+``compiled.cost_analysis()`` (and text-parsed collective bytes) count a
+``while``-loop body **once** — measured directly in this repo: a qwen2
+train_4k probe reports 1.298e12 FLOPs at 2, 4 and 8 layers alike.  A step
+with scanned layers and scanned microbatches therefore under-reports by
+~L·n_mb.  We recover the true per-step cost from *unrolled* probe compiles
+(``cfg.unroll_layers=True`` replaces the layer scan with a python loop, so
+per-layer cost is visible) and the exact linear structure:
+
+  counted_unrolled(L, B) = OUT + MB(B) + L·LY(B)
+  true(L, B_mb, n_mb)    = OUT + n_mb · (MB(B_mb) + L·LY(B_mb))
+
+where OUT = outside both loops (optimizer update, grad reduction), MB =
+per-microbatch fixed part (embed, unembed, loss), LY = one layer.  MB and LY
+are linear in batch; OUT is batch-independent.  Three probes identify all
+three terms per metric:
+
+  P_a  = (L=la, B=B0)     P_b = (L=lb, B=B0)     P_a2 = (L=la, B=2·B0)
+
+  LY(B0) = (P_b − P_a)/(lb − la)
+  MB(B0) = (P_a2 − P_a) − la·LY(B0)
+  OUT    = 2·P_a − P_a2
+
+Serving steps (no optimizer/microbatch loop) use the same probes with
+n_mb = 1.  Probe compiles are small (2–6 layers, 1/8 batch), seconds each.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from .analyze import HW, collective_bytes, roofline_terms
+
+METRICS = ("flops", "bytes", "coll")
+
+
+def _probe(arch: str, shape_name: str, mesh, **kw) -> Dict[str, float]:
+    from repro.launch.dryrun import build_cell
+    lower_fn, meta = build_cell(
+        arch, shape_name, mesh,
+        cfg_overrides={"unroll_layers": True}, **kw)
+    compiled = lower_fn().compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["weighted_bytes"]),
+    }
+
+
+def _probe_layers(cfg) -> tuple:
+    """(la, lb) respecting layer-group structure (hybrid patterns, leading
+    dense layers)."""
+    g = len(cfg.block_pattern) if cfg.block_pattern else 1
+    base = cfg.first_dense_layers
+    la = base + g * (2 if g == 1 else 1)
+    lb = base + g * (4 if g == 1 else 2)
+    return la, lb
+
+
+def calibrate_cell(arch: str, shape_name: str, mesh,
+                   microbatches: int = 8) -> Dict:
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    L = cfg.n_layers
+    la, lb = _probe_layers(cfg)
+    train = shape.kind == "train"
+    n_mb = microbatches if train else 1
+    b_full = shape.global_batch
+    b0 = max(b_full // n_mb, 1) if train else b_full
+    # Batch probes need 2·B0 ≤ full batch and divisibility by the data axes.
+    b2 = min(2 * b0, b_full) if train else b_full
+    mbkw = {"microbatches": 1} if train else {}
+
+    pa = _probe(arch, shape_name, mesh, n_layers=la, global_batch=b0, **mbkw)
+    pb = _probe(arch, shape_name, mesh, n_layers=lb, global_batch=b0, **mbkw)
+    if train and b2 > b0:
+        pa2 = _probe(arch, shape_name, mesh, n_layers=la, global_batch=b2,
+                     **mbkw)
+    else:
+        pa2 = None
+
+    out: Dict = {"probe_layers": (la, lb), "n_mb": n_mb}
+    for m in METRICS:
+        ly = max((pb[m] - pa[m]) / (lb - la), 0.0)
+        if pa2 is not None:
+            mb_part = max((pa2[m] - pa[m]) / (b2 / b0 - 1.0) - la * ly, 0.0)
+            outpart = max(pa[m] - mb_part - la * ly, 0.0)
+        else:
+            mb_part = max(pa[m] - la * ly, 0.0)
+            outpart = 0.0
+        out[m] = outpart + n_mb * (mb_part + L * ly)
+        out[m + "_layer"] = ly
+        out[m + "_mb_fixed"] = mb_part
+        out[m + "_outside"] = outpart
+    out["roofline"] = roofline_terms(out["flops"], out["bytes"], out["coll"])
+    return out
+
+
+def calibrate_and_update(arch: str, shape_name: str, mesh, art_dir: str,
+                         tag: str = "single") -> Dict:
+    """Write calibrated terms into the cell's dry-run artifact."""
+    from repro.configs import SHAPES, get_config
+    from .analyze import analytic_bytes_floor
+
+    cal = calibrate_cell(arch, shape_name, mesh)
+    fn = os.path.join(art_dir, f"{arch}__{shape_name}__{tag}.json")
+    if not os.path.exists(fn):
+        return {"calibrated": cal}
+    with open(fn) as f:
+        d = json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_chips = 1
+    for v in d["mesh"].values():
+        n_chips *= v
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    cache_b = 0
+    if shape.kind != "train":
+        cache_b = int(d["memory"]["argument_bytes"]) * n_chips  # incl. cache
+    floor = analytic_bytes_floor(
+        shape.kind, n_params=d["n_params"], n_active=d["n_params_active"],
+        n_layers=cfg.n_layers, d_model=cfg.d_model, vocab=cfg.vocab,
+        tokens=tokens, n_mb=cal["n_mb"], n_chips=n_chips,
+        cache_bytes=cache_b,
+        opt_bytes_per_param=4 if "int8" in d.get("optimizer", "") else 16)
+    cal["bytes_floor"] = floor
+    cal["memory_floor_s"] = floor / HW["hbm_bw"]
+    r = cal["roofline"]
+    bound_opt = max(r["compute_s"], cal["memory_floor_s"], r["collective_s"])
+    cal["roofline_fraction_optimistic"] = (
+        r["compute_s"] / bound_opt if bound_opt else 0.0)
+
+    d["calibrated"] = cal
+    mf = d.get("model_flops_per_device", 0.0)
+    d["calibrated"]["useful_flop_ratio"] = (
+        mf / cal["flops"] if cal["flops"] else 0.0)
+    with open(fn, "w") as f:
+        json.dump(d, f, indent=1)
+    return d
+
+
+def main():
+    import argparse
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    from repro.configs import ARCH_NAMES, get_config, SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    for arch in archs:
+        cfg = get_config(arch)
+        for sh in ([args.shape] if args.shape else list(SHAPES)):
+            if skip_reason(cfg, sh):
+                continue
+            try:
+                d = calibrate_and_update(arch, sh, mesh, args.out)
+                c = d["calibrated"]
+                r = c["roofline"]
+                print(f"CAL {arch} {sh}: flops={c['flops']:.3e} "
+                      f"bytes={c['bytes']:.3e} coll={c['coll']:.3e} "
+                      f"dom={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"useful={c.get('useful_flop_ratio', 0):.3f}",
+                      flush=True)
+            except Exception as e:
+                print(f"CALFAIL {arch} {sh}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving engine: prefill + greedy/temperature decode with jitted
+steps and donated caches (buffer reuse across decode steps)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def __init__(self, model, params, max_seq: int):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode, donate_argnums=(3,))
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,           # [B, S_prompt] int32
+        steps: int,
+        temperature: float = 0.0,
+        rng: Optional[jax.Array] = None,
+        extra_batch: Optional[Dict] = None,
+    ) -> np.ndarray:
+        """Greedy (or sampled) continuation of a batch of equal-length
+        prompts; returns [B, steps] generated tokens."""
+        b, s_prompt = prompts.shape
+        cache = self.model.init_cache(b, self.max_seq)
+        batch = {"tokens": prompts, **(extra_batch or {})}
+        logits, cache = self._prefill(self.params, batch, cache)
+        prefix = (self.model.cfg.n_frontend_tokens
+                  if self.model.cfg.frontend == "patches" else 0)
+        pos = s_prompt + prefix
+        out = []
+        tok = self._pick(logits[:, -1], temperature, rng, 0)
+        for i in range(steps):
+            out.append(tok)
+            logits, cache = self._decode(self.params, tok, jnp.int32(pos),
+                                         cache)
+            pos += 1
+            tok = self._pick(logits[:, -1], temperature, rng, i + 1)
+        return np.concatenate([np.asarray(t) for t in out], axis=1)
+
+    @staticmethod
+    def _pick(logits, temperature, rng, i):
+        if temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        key = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

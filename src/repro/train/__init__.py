@@ -1,0 +1,3 @@
+from .train_step import TrainConfig, TrainState, make_train_step, init_train_state
+
+__all__ = ["TrainConfig", "TrainState", "init_train_state", "make_train_step"]

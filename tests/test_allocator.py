@@ -1,0 +1,109 @@
+"""Allocator tests (thesis §6.6): first-fit, free with merge, reuse, and the
+live-bytes accounting that lets the swap engine skip dead regions."""
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Allocator, ContextLayout
+
+
+def test_sequential_offsets():
+    a = Allocator(100)
+    assert (a.alloc(30), a.alloc(30), a.alloc(30)) == (0, 30, 60)
+
+
+def test_split_hole_first_fit():
+    a = Allocator(100)
+    o1, o2, o3 = a.alloc(30), a.alloc(30), a.alloc(30)
+    a.free(o2)
+    # First fit: a 20-word request reuses the start of the freed hole.
+    assert a.alloc(20) == 30
+    # The hole has 10 words left at offset 50; a 10-word fit lands there.
+    assert a.alloc(10) == 50
+
+
+def test_first_fit_and_reuse_exact():
+    a = Allocator(100)
+    o1, o2, o3 = a.alloc(30), a.alloc(30), a.alloc(30)
+    a.free(o2)
+    assert a.alloc(30) == 30          # exact reuse
+    a.free(o1)
+    a.free(o3)
+    assert a.live_words == 30
+    with pytest.raises(MemoryError):
+        a.alloc(80)                    # fragmented: 30 live in the middle
+
+
+def test_merge_on_free_defragments():
+    a = Allocator(90)
+    o1, o2, o3 = a.alloc(30), a.alloc(30), a.alloc(30)
+    a.free(o1)
+    a.free(o3)
+    assert a.n_free_chunks == 2
+    a.free(o2)                         # merges with both neighbours
+    assert a.n_free_chunks == 1
+    assert a.alloc(90) == 0
+
+
+def test_exhaustion_raises():
+    a = Allocator(10)
+    a.alloc(10)
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+
+
+def test_double_free_raises():
+    a = Allocator(10)
+    o = a.alloc(5)
+    a.free(o)
+    with pytest.raises(ValueError):
+        a.free(o)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=30),
+       st.integers(0, 2**31 - 1))
+def test_allocator_invariants_property(sizes, seed):
+    """Random alloc/free interleaving preserves: no overlap, live-word
+    accounting, and full-merge on total free."""
+    import random
+    rng = random.Random(seed)
+    a = Allocator(400)
+    live = {}
+    for s in sizes:
+        try:
+            off = a.alloc(s)
+        except MemoryError:
+            continue
+        # No overlap with any live allocation.
+        for o2, s2 in live.items():
+            assert off + s <= o2 or o2 + s2 <= off
+        live[off] = s
+        if live and rng.random() < 0.4:
+            victim = rng.choice(list(live))
+            a.free(victim)
+            del live[victim]
+    assert a.live_words == sum(live.values())
+    for off in list(live):
+        a.free(off)
+    assert a.live_words == 0
+    assert a.n_free_chunks == 1
+
+
+def test_layout_drop_frees_and_reuses():
+    lo = ContextLayout(capacity_words=64)
+    lo.add("a", (32,), jnp.float32)
+    lo.add("b", (32,), jnp.int32)
+    assert lo.live_words == 64
+    lo.drop("a")
+    assert lo.live_words == 32
+    lo.add("c", (16,), jnp.float32)
+    assert lo.offset("c") == 0         # reused the freed region
+    assert lo.mu_bytes == 64 * 4       # μ is the fixed capacity
+
+
+def test_layout_rejects_narrow_dtypes():
+    lo = ContextLayout()
+    with pytest.raises(TypeError):
+        lo.add("h", (4,), jnp.bfloat16)

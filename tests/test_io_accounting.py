@@ -1,0 +1,205 @@
+"""The reproduction's correctness core: the executable I/O ledger must equal
+the thesis' closed-form lemmas, swept over simulation parameters.
+
+Covers Lemma 2.2.1 (PEMS1 Alltoallv), Lemma 7.1.3 + Cor 7.1.4 (EM-Alltoallv-
+Seq), the exact parallel model vs analysis.pems2_alltoallv_par_io_exact,
+Lemma 7.2.1 (Bcast), Lemma 7.4.2 (Reduce), Thm 2.2.3/§6.3 disk space, and the
+Fig 6.2 disk-space table."""
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ContextLayout, Pems, PemsConfig, analysis
+
+
+def mk(v, omega, extra=64):
+    return (
+        ContextLayout()
+        .add("pad", (extra,), jnp.int32)
+        .add("send", (v, omega), jnp.int32)
+        .add("recv", (v, omega), jnp.int32)
+    )
+
+
+def fresh(v, k, lo, **kw):
+    pems = Pems(PemsConfig(v=v, k=k, **kw), lo)
+    store = pems.init()
+    return pems, store
+
+
+# --------------------------------------------------------------------------- #
+# Alltoallv volumes                                                            #
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rounds=st.integers(1, 5),
+    k=st.integers(1, 4),
+    omega=st.integers(1, 16),
+    extra=st.integers(1, 128),
+)
+def test_alltoallv_direct_matches_lemma_7_1_3(rounds, k, omega, extra):
+    v = rounds * k
+    lo = mk(v, omega, extra)
+    pems, store = fresh(v, k, lo)
+    base = pems.ledger.io_total
+    pems.alltoallv(store, "send", "recv", mode="direct")
+    got = pems.ledger.io_total - base
+    want = analysis.pems2_alltoallv_seq_io(
+        v, k, lo.live_bytes, omega * 4, pems.cfg.block_bytes
+    )
+    assert got == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rounds=st.integers(1, 5),
+    k=st.integers(1, 4),
+    omega=st.integers(1, 16),
+    extra=st.integers(1, 128),
+)
+def test_alltoallv_indirect_matches_lemma_2_2_1(rounds, k, omega, extra):
+    v = rounds * k
+    lo = mk(v, omega, extra)
+    pems, store = fresh(v, k, lo)
+    base = pems.ledger.io_total
+    pems.alltoallv(store, "send", "recv", mode="indirect")
+    got = pems.ledger.io_total - base
+    assert got == analysis.pems1_alltoallv_io(v, lo.live_bytes, omega * 4)
+
+
+def test_corollary_7_1_4_improvement():
+    v, k, omega = 16, 4, 8
+    lo = mk(v, omega)
+    mu, ob, B = lo.live_bytes, omega * 4, 4096
+    p1, s1 = fresh(v, k, lo)
+    p2, s2 = fresh(v, k, lo)
+    b1, b2 = p1.ledger.io_total, p2.ledger.io_total
+    p1.alltoallv(s1, "send", "recv", mode="indirect")
+    p2.alltoallv(s2, "send", "recv", mode="direct")
+    # Cor 7.1.4 compares against 3vμ for PEMS1 (the trailing swap-in of
+    # Alg 2.2.1 line 8 is charged to the *next* superstep in steady state),
+    # while Lemma 2.2.1 counts the full 4vμ for a standalone call.
+    diff = ((p1.ledger.io_total - b1) - mu * v) - (p2.ledger.io_total - b2)
+    assert diff == analysis.pems2_alltoallv_seq_improvement(v, k, mu, ob, B)
+
+
+def test_parallel_io_exact_reduces_to_seq_at_P1():
+    for v, k, omega, mu in [(8, 2, 16, 10_000), (16, 4, 4, 5_000)]:
+        assert analysis.pems2_alltoallv_par_io_exact(
+            v, 1, k, mu, omega, 4096
+        ) == analysis.pems2_alltoallv_seq_io(v, k, mu, omega, 4096)
+
+
+def test_parallel_ledger_matches_exact_model():
+    """Direct-mode ledger with P>1 equals the exact event model (swap + msg +
+    boundary; network tracked separately)."""
+    v, P, k, omega = 16, 4, 2, 8
+    lo = mk(v, omega)
+    # Build a P>1 Pems without running anything (ledger math is trace-time and
+    # mesh-independent), by faking the mesh check:
+    pems = Pems.__new__(Pems)
+    pems.cfg = PemsConfig(v=v, k=k, P=P)
+    pems.layout = lo
+    from repro.core import IOLedger
+    pems.ledger = IOLedger()
+    from repro.core.collectives import _ledger_alltoallv
+    _ledger_alltoallv(pems, omega * 4, "direct")
+    want = analysis.pems2_alltoallv_par_io_exact(
+        v, P, k, lo.live_bytes, omega * 4, pems.cfg.block_bytes
+    )
+    assert pems.ledger.io_total == want
+    # Network volume: each VP sends v − v/P remote messages.
+    assert pems.ledger.network == v * (v - v // P) * omega * 4
+
+
+# --------------------------------------------------------------------------- #
+# Rooted collectives                                                           #
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=20, deadline=None)
+@given(rounds=st.integers(1, 4), k=st.integers(1, 4), n=st.integers(1, 32))
+def test_bcast_matches_lemma_7_2_1(rounds, k, n):
+    v = rounds * k
+    lo = ContextLayout().add("x", (n,), jnp.float32)
+    pems, store = fresh(v, k, lo)
+    base = pems.ledger.io_total
+    pems.bcast(store, "x")
+    got = pems.ledger.io_total - base
+    assert got == analysis.em_bcast_io(v, 1, k, lo.live_bytes, n * 4)
+
+
+def test_reduce_matches_lemma_7_4_2():
+    v, k, n = 8, 2, 16
+    lo = (ContextLayout().add("x", (n,), jnp.float32)
+          .add("out", (n,), jnp.float32))
+    pems, store = fresh(v, k, lo)
+    base = pems.ledger.io_total
+    pems.reduce(store, "x", "out")
+    assert pems.ledger.io_total - base == analysis.em_reduce_io(1, n * 4)
+
+
+def test_gather_io_is_mu_plus_result():
+    v, k, n = 8, 2, 4
+    lo = (ContextLayout().add("x", (n,), jnp.int32)
+          .add("gath", (v, n), jnp.int32))
+    pems, store = fresh(v, k, lo)
+    base = pems.ledger.io_total
+    pems.gather(store, "x", "gath")
+    # Exact form: root swap-out (μ) + the v·ω gathered result written to disk.
+    # (Lemma 7.3.1 prints μ+ω with ω = the whole gathered payload.)
+    assert pems.ledger.io_total - base == lo.live_bytes + v * n * 4
+
+
+# --------------------------------------------------------------------------- #
+# Disk space (§6.3, Fig 6.2)                                                   #
+# --------------------------------------------------------------------------- #
+
+def test_disk_space_direct_vs_indirect():
+    v, k, omega = 8, 2, 4
+    lo = mk(v, omega)
+    p2, s2 = fresh(v, k, lo)
+    p2.alltoallv(s2, "send", "recv", mode="direct")
+    assert p2.ledger.disk_space == analysis.pems2_disk_space(v, 1, lo.mu_bytes)
+
+    p1, s1 = fresh(v, k, lo)
+    p1.alltoallv(s1, "send", "recv", mode="indirect")
+    assert p1.ledger.disk_space == (
+        analysis.pems2_disk_space(v, 1, lo.mu_bytes) + v * v * omega * 4
+    )
+
+
+def test_fig_6_2_disk_space_table():
+    GiB = 1024**3
+    rows = analysis.disk_space_table(8, 2 * GiB)
+    # Fig 6.2 exact values (v/P=8, μ=2 GiB).
+    want = [
+        (1, 8, 16, 32, 32, 16, 16),
+        (2, 16, 32, 48, 96, 16, 32),
+        (4, 32, 64, 80, 320, 16, 64),
+        (8, 64, 128, 144, 1152, 16, 128),
+        (16, 128, 256, 272, 4352, 16, 256),
+    ]
+    got = [(P, v, req // GiB, p1p // GiB, p1t // GiB, p2p // GiB, p2t // GiB)
+           for (P, v, req, p1p, p1t, p2p, p2t) in rows]
+    assert got == want
+
+
+# --------------------------------------------------------------------------- #
+# Sliced driver ledger (§5.2: touched bytes only)                              #
+# --------------------------------------------------------------------------- #
+
+def test_sliced_driver_moves_fewer_bytes():
+    v, k = 8, 2
+    lo = (ContextLayout()
+          .add("big", (4096,), jnp.float32)
+          .add("small", (4,), jnp.float32))
+    ex = Pems(PemsConfig(v=v, k=k, driver="explicit"), lo)
+    sl = Pems(PemsConfig(v=v, k=k, driver="sliced"), lo)
+    f = lambda rho, c: c.set("small", c.get("small") + 1.0)
+    ex.superstep(ex.init(), f, reads=["small"], writes=["small"])
+    sl.superstep(sl.init(), f, reads=["small"], writes=["small"])
+    assert ex.ledger.swap_total == 2 * v * lo.live_bytes
+    assert sl.ledger.swap_total == 2 * v * 4 * 4
+    assert sl.ledger.swap_total < ex.ledger.swap_total // 100

@@ -1,0 +1,187 @@
+"""Per-kernel validation: shape/dtype sweeps in interpret mode against the
+pure-jnp oracles, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.alltoallv_deliver.ops import deliver
+from repro.kernels.alltoallv_deliver.ref import deliver_ref
+from repro.kernels.bitonic_sort.ops import sort as bitonic_sort
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lru_scan.ops import lru_scan
+from repro.kernels.lru_scan.ref import lru_scan_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention                                                              #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (1, 2, 2, 128, 128, 64),   # MHA
+    (2, 4, 2, 64, 64, 32),     # GQA group 2
+    (1, 8, 1, 96, 160, 64),    # MQA, uneven seqs
+    (1, 2, 1, 33, 70, 16),     # non-block-aligned
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_attention_matches_decode_pattern():
+    """Sq=1 with a long KV (the serve_step decode shape)."""
+    q = jnp.asarray(RNG.normal(size=(2, 4, 1, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 2, 333, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 2, 333, 64)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# bitonic sort                                                                 #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("rows,n", [(1, 2), (4, 64), (2, 1000), (1, 4096)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_bitonic_sort_sweep(rows, n, dtype):
+    if dtype == np.int32:
+        x = RNG.integers(-2**31, 2**31 - 1, size=(rows, n)).astype(dtype)
+    else:
+        x = RNG.normal(size=(rows, n)).astype(dtype)
+    out = bitonic_sort(jnp.asarray(x), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-2**31, 2**31 - 1), min_size=1, max_size=300))
+def test_bitonic_sort_property(data):
+    x = np.asarray(data, np.int32)
+    out = bitonic_sort(jnp.asarray(x), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x))
+
+
+# --------------------------------------------------------------------------- #
+# alltoallv direct delivery                                                    #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("v,omega", [(2, 8), (6, 32), (8, 128), (4, 129)])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_deliver_sweep(v, omega, dtype):
+    msgs = jnp.asarray(RNG.normal(size=(v, v, omega)) * 100, dtype)
+    cnts = jnp.asarray(RNG.integers(0, omega + 1, (v, v)), jnp.int32)
+    out = deliver(msgs, cnts, interpret=True)
+    ref = deliver_ref(msgs, cnts)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_deliver_boundary_masking():
+    """The boundary fix-up: bytes past counts[s, d] never leak through."""
+    v, omega = 4, 16
+    msgs = jnp.full((v, v, omega), 7, jnp.int32)
+    cnts = jnp.zeros((v, v), jnp.int32).at[1, 2].set(5)
+    out = np.asarray(deliver(msgs, cnts, fill=-1, interpret=True))
+    assert (out[2, 1, :5] == 7).all() and (out[2, 1, 5:] == -1).all()
+    mask = np.ones((v, v), bool)
+    mask[2, 1] = False
+    assert (out[mask] == -1).all()
+
+
+# --------------------------------------------------------------------------- #
+# lru scan                                                                     #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,s,d,chunk", [
+    (1, 32, 8, 8), (2, 128, 16, 32), (1, 77, 4, 16), (3, 256, 2, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan_sweep(b, s, d, chunk, dtype):
+    a = jnp.asarray(RNG.uniform(0.2, 0.999, (b, s, d)), dtype)
+    x = jnp.asarray(RNG.normal(size=(b, s, d)), dtype)
+    out = lru_scan(a, x, chunk=chunk, interpret=True)
+    ref = lru_scan_ref(a, x)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 48, 128]))
+def test_lru_scan_property(seed, s):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.0, 1.0, (1, s, 4)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, s, 4)), jnp.float32)
+    out = lru_scan(a, x, chunk=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(lru_scan_ref(a, x)), atol=1e-4
+    )
+
+
+# --------------------------------------------------------------------------- #
+# ssd scan                                                                     #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,h,s,p,n,chunk", [
+    (1, 1, 32, 8, 4, 8),
+    (2, 3, 64, 16, 8, 16),
+    (1, 2, 100, 8, 16, 32),    # padded sequence
+])
+def test_ssd_scan_sweep(b, h, s, p, n, chunk):
+    x = jnp.asarray(RNG.normal(size=(b, h, s, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (b, h, s)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.3, 2.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Chunk size is an implementation detail: results must match across
+    chunkings (the EM block-size independence property)."""
+    b, h, s, p, n = 1, 2, 64, 8, 8
+    x = jnp.asarray(RNG.normal(size=(b, h, s, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (b, h, s)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.3, 2.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    outs = [
+        np.asarray(ssd_scan(x, dt, A, Bm, Cm, chunk=c, interpret=True))
+        for c in (8, 16, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# PSRS with the bitonic kernel as the local sort                               #
+# --------------------------------------------------------------------------- #
+
+def test_psrs_with_bitonic_local_sort():
+    from repro.pems_apps import psrs_sort
+    import functools
+    x = RNG.integers(-2**30, 2**30, size=512, dtype=np.int32)
+    out = psrs_sort(
+        x, v=4, k=2,
+        local_sort=functools.partial(bitonic_sort, interpret=True),
+    )
+    np.testing.assert_array_equal(out, np.sort(x))

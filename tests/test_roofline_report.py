@@ -1,0 +1,72 @@
+"""Unit tests for the roofline report/table generation and the analytic
+memory floor (no compiles needed)."""
+
+import numpy as np
+
+from repro.roofline.analyze import analytic_bytes_floor
+from repro.roofline.report import dryrun_table, roofline_table
+
+
+def _row(**kw):
+    base = {
+        "arch": "test-arch", "shape": "train_4k", "kind": "train",
+        "multi_pod": False, "compile_s": 1.0,
+        "mesh": {"data": 16, "model": 16},
+        "memory": {"per_device_bytes": 8e9, "fits_hbm": True,
+                   "argument_bytes": 1, "output_bytes": 1, "temp_bytes": 1,
+                   "alias_bytes": 0},
+        "cost": {"flops_per_device": 1e12, "bytes_per_device": 1e11},
+        "collectives": {"bytes_by_kind": {"all-gather": 1e9, "all-reduce": 0,
+                                          "reduce-scatter": 0,
+                                          "all-to-all": 0,
+                                          "collective-permute": 0},
+                        "count_by_kind": {}, "weighted_bytes": 1e9},
+        "roofline": {"compute_s": 0.005, "memory_s": 0.12,
+                     "collective_s": 0.02, "dominant": "memory",
+                     "roofline_fraction": 0.04,
+                     "step_lower_bound_s": 0.12},
+        "useful_flop_ratio": 0.5,
+        "optimizer": "adamw-f32",
+    }
+    base.update(kw)
+    return base
+
+
+def test_dryrun_table_rows():
+    rows = [_row(), {"arch": "x", "shape": "long_500k", "skipped": "reason"}]
+    t = dryrun_table(rows, "single")
+    assert "test-arch" in t and "SKIP: reason" in t
+    assert "8.00" in t          # bytes/dev GB
+
+
+def test_roofline_table_prefers_calibrated():
+    d = _row()
+    d["calibrated"] = {
+        "flops": 5e13, "bytes": 2e12, "coll": 5e10,
+        "roofline": {"compute_s": 0.25, "memory_s": 2.4,
+                     "collective_s": 1.0, "dominant": "memory",
+                     "roofline_fraction": 0.105,
+                     "step_lower_bound_s": 2.4},
+        "useful_flop_ratio": 0.4, "memory_floor_s": 0.5,
+        "roofline_fraction_optimistic": 0.25,
+    }
+    t = roofline_table([d])
+    assert "0.25" in t and "0.105" in t and "0.400" in t
+
+
+def test_analytic_floor_train_scales_sanely():
+    common = dict(n_params=int(1.5e9), n_active=int(1.5e9), n_layers=28,
+                  d_model=1536, vocab=151936, tokens=256 * 4096, n_mb=8,
+                  n_chips=256)
+    b = analytic_bytes_floor("train", **common)
+    # At minimum: params touched several times -> order GBs per device.
+    assert 1e8 < b < 1e12
+    # int8 moments shrink the floor.
+    b8 = analytic_bytes_floor("train", **dict(common, opt_bytes_per_param=4))
+    assert b8 < b
+    # decode floor is dominated by param + cache streaming.
+    bd = analytic_bytes_floor("decode", n_params=int(1.5e9),
+                              n_active=int(1.5e9), n_layers=28, d_model=1536,
+                              vocab=151936, tokens=128, n_mb=1, n_chips=256,
+                              cache_bytes=int(20e9))
+    assert bd > 0

@@ -1,0 +1,235 @@
+"""Substrate tests: optimizer (f32 + int8 moments), microbatch accumulation,
+gradient compression, checkpoint fault tolerance, data determinism, sharding
+rules, and a small end-to-end training run with loss decrease."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, synthetic_batches
+from repro.data.pipeline import synthetic_batch
+from repro.models import Model
+from repro.optim import OptConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train import TrainConfig, init_train_state, make_train_step
+
+
+# --------------------------------------------------------------------------- #
+# Optimizer                                                                    #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_adamw_converges_quadratic(quant):
+    cfg = OptConfig(lr=0.1, weight_decay=0.0, quantize_moments=quant, block=8)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = adamw_init(params, cfg)
+    target = jnp.array([1.0, 1.0, 1.0])
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_adamw_int8_state_is_int8():
+    cfg = OptConfig(quantize_moments=True, block=16)
+    params = {"w": jnp.zeros((40,), jnp.float32)}
+    state = adamw_init(params, cfg)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+    # 4x smaller than f32 moments (plus small scale overhead).
+    f32_bytes = 40 * 4
+    q_bytes = state["m"]["w"]["q"].size
+    assert q_bytes <= f32_bytes // 2
+
+
+def test_cosine_schedule_shape():
+    s0 = float(cosine_schedule(0, warmup=10, total=100))
+    s_w = float(cosine_schedule(10, warmup=10, total=100))
+    s_end = float(cosine_schedule(100, warmup=10, total=100))
+    assert s0 == 0.0 and abs(s_w - 1.0) < 1e-6 and 0.05 < s_end < 0.15
+
+
+# --------------------------------------------------------------------------- #
+# Train step                                                                   #
+# --------------------------------------------------------------------------- #
+
+def _tiny_setup(microbatches=1, grad_compress=False):
+    cfg = get_config("qwen2-1.5b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=1e-3, weight_decay=0.0),
+        microbatches=microbatches, warmup_steps=2, total_steps=100,
+        grad_compress=grad_compress)
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    data = DataConfig(seq_len=16, global_batch=4, vocab=cfg.vocab, seed=0)
+    return model, state, step, data
+
+
+def test_train_loss_decreases():
+    _, state, step, data = _tiny_setup()
+    losses = []
+    for i, batch in zip(range(30), synthetic_batches(data)):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::10]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_equals_full_batch_grads():
+    """4 microbatches of 1 == 1 batch of 4 (same update direction)."""
+    _, state1, step1, data = _tiny_setup(microbatches=1)
+    _, state4, step4, _ = _tiny_setup(microbatches=4)
+    batch = synthetic_batch(data, 0)
+    s1, m1 = step1(state1, batch)
+    s4, m4 = step4(state4, batch)
+    # Same loss and nearly identical parameters after one update.
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        s1.params, s4.params)
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_grad_compression_still_converges():
+    _, state, step, data = _tiny_setup(grad_compress=True)
+    losses = []
+    for i, batch in zip(range(30), synthetic_batches(data)):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::10]
+
+
+# --------------------------------------------------------------------------- #
+# Checkpointing / fault tolerance                                              #
+# --------------------------------------------------------------------------- #
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": {"c": jnp.int32(7)}}
+    mgr.save(3, state)
+    got = mgr.restore_latest(like=state)
+    assert got is not None
+    step, restored = got
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(state["a"]))
+    assert int(restored["b"]["c"]) == 7
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"x": jnp.zeros(4)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.full(4, float(s))})
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_000000000003", "step_000000000004"]
+    step, restored = mgr.restore_latest(like=state)
+    assert step == 4 and float(restored["x"][0]) == 4.0
+
+
+def test_checkpoint_survives_torn_write(tmp_path):
+    """A crash mid-save (manifest missing / corrupt) must fall back to the
+    previous checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    state = {"x": jnp.zeros(4)}
+    mgr.save(1, {"x": jnp.full(4, 1.0)})
+    mgr.save(2, {"x": jnp.full(4, 2.0)})
+    # Simulate a torn checkpoint at step 3: directory exists, manifest bad.
+    d = tmp_path / "step_000000000003"
+    d.mkdir()
+    (d / "manifest.json").write_text("{ corrupt")
+    step, restored = mgr.restore_latest(like=state)
+    assert step == 2 and float(restored["x"][0]) == 2.0
+
+
+def test_crash_resume_training_continuity(tmp_path):
+    """Kill training mid-run; resume from checkpoint; the loss trajectory
+    continues (bitwise: same data stream via step counter)."""
+    _, state, step_fn, data = _tiny_setup()
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    losses_a = []
+    for i, batch in zip(range(10), synthetic_batches(data)):
+        state, m = step_fn(state, batch)
+        losses_a.append(float(m["loss"]))
+        if i == 4:
+            mgr.save(i + 1, state)
+    # "crash" — rebuild everything from disk
+    _, fresh, step_fn2, _ = _tiny_setup()
+    got = mgr.restore_latest(like=fresh)
+    assert got is not None
+    start, state2 = got
+    assert start == 5
+    losses_b = []
+    for i, batch in zip(range(start, 10),
+                        synthetic_batches(data, start_step=start)):
+        state2, m = step_fn2(state2, batch)
+        losses_b.append(float(m["loss"]))
+    np.testing.assert_allclose(losses_a[start:], losses_b, rtol=1e-5)
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"x": jnp.arange(10_000, dtype=jnp.float32)}
+    mgr.save(1, state, blocking=False)
+    mgr.wait()
+    got = mgr.restore_latest(like=state)
+    assert got is not None and got[0] == 1
+
+
+# --------------------------------------------------------------------------- #
+# Data pipeline                                                                #
+# --------------------------------------------------------------------------- #
+
+def test_data_deterministic_and_step_addressable():
+    d = DataConfig(seq_len=32, global_batch=4, vocab=1000, seed=7)
+    b1 = synthetic_batch(d, 5)
+    b2 = synthetic_batch(d, 5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = synthetic_batch(d, 6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert int(b1["tokens"].max()) < 1000 and int(b1["tokens"].min()) >= 0
+
+
+def test_data_vlm_and_audio_fronts():
+    d = DataConfig(seq_len=16, global_batch=2, vocab=100, frontend="patches",
+                   n_frontend_tokens=4, d_model=8)
+    b = synthetic_batch(d, 0)
+    assert b["tokens"].shape == (2, 12) and b["patches"].shape == (2, 4, 8)
+    d2 = DataConfig(seq_len=16, global_batch=2, vocab=100, frontend="frames",
+                    d_model=8)
+    b2 = synthetic_batch(d2, 0)
+    assert b2["frames"].shape == (2, 16, 8) and b2["labels"].shape == (2, 16)
+
+
+# --------------------------------------------------------------------------- #
+# Sharding rules (structure only; device placement exercised by the dry-run)   #
+# --------------------------------------------------------------------------- #
+
+def test_param_pspecs_cover_model():
+    from repro.distributed.sharding import ShardingRules, param_pspecs
+    from jax.sharding import PartitionSpec as P
+    cfg = get_config("kimi-k2-1t-a32b").smoke()
+    model = Model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = ShardingRules(mesh=mesh)
+    specs = param_pspecs(rules, params)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) <= len(p.shape)
