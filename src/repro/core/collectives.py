@@ -16,8 +16,29 @@ Two Alltoallv implementations are provided:
   optimization barrier so XLA cannot fuse the copy away), costing the extra
   write+read the thesis eliminates.
 
+Direct mode with ``P == 1`` routes through the fused *word-level* delivery
+path by default (``use_kernel=True``): the send field's raw word range is
+sliced straight out of the ``[v, words]`` context store
+(:meth:`ContextStore.field_words_view`), handed to the Pallas direct-delivery
+kernel (:mod:`repro.kernels.alltoallv_deliver` — compiled on TPU, vectorised
+fallback elsewhere, interpret mode for tests), and the delivered ``[v(dst),
+v(src), ω]`` block is written back into the recv word range
+(:meth:`ContextStore.with_field_words`; on CPU, cache-sized ω instead takes
+a row-at-a-time in-place loop, ``_deliver_rows_inplace``).  This collapses
+the seed's dense gather→bitcast→reshape→transpose→scatter round-trip into
+slice → deliver → store-row rebuild, fuses the counts transpose into the
+same kernel call, and — when the caller passes ``fill`` — also fuses the
+receiver's boundary mask (lanes past ``counts[s, d]`` arrive as ``fill``,
+the thesis' boundary-block fix-up), so applications like PSRS no longer
+re-mask downstream.  ``use_kernel=False`` keeps the seed's dense-transpose
+path; both are bit-identical (and ≈1.6–2.8× apart in wall time on CPU at
+v=16, ω ≥ 256 — see ``benchmarks/bench_alltoallv.py``).
+
 The I/O ledger is updated with *event-level* counts that tests validate
-against the closed forms in :mod:`repro.core.analysis`.
+against the closed forms in :mod:`repro.core.analysis`; the delivery
+implementation (kernel vs dense, masked vs not) never changes the event
+counts — they model the simulated external-memory traffic, not the host
+execution strategy.
 """
 
 from __future__ import annotations
@@ -30,7 +51,7 @@ import numpy as _np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from .context import ContextStore, WORD
+from .context import ContextStore, WORD, _from_words
 
 
 # --------------------------------------------------------------------------- #
@@ -45,9 +66,18 @@ def alltoallv(
     send_counts: Optional[str] = None,
     recv_counts: Optional[str] = None,
     mode: str = "direct",
+    fill=None,
+    use_kernel: bool = True,
 ) -> ContextStore:
     """Every VP ρ sends message ``send[d]`` to VP d; after the call VP ρ holds
-    ``recv[s] =`` (s's message to ρ) and transposed counts."""
+    ``recv[s] =`` (s's message to ρ) and transposed counts.
+
+    ``fill`` (optional, requires counts) fuses the receiver's boundary mask
+    into delivery: lanes past ``send_counts[ρ][d]`` arrive as ``fill``
+    instead of whatever padding the sender left.  ``use_kernel=False`` keeps
+    the seed's dense-transpose implementation (bit-identical, for
+    equivalence testing); the ledger is unaffected by either knob.
+    """
     if mode not in ("direct", "indirect"):
         raise ValueError(f"unknown mode {mode!r}")
     cfg = self.cfg
@@ -56,7 +86,109 @@ def alltoallv(
         raise ValueError("send/recv field shapes must match")
     if f.shape[0] != cfg.v:
         raise ValueError(f"alltoallv fields must be [v, ω]; got {f.shape}")
+    if fill is not None and (send_counts is None or recv_counts is None):
+        raise ValueError("fill requires send_counts/recv_counts")
     omega_b = int(_np.prod(f.shape[1:], dtype=_np.int64)) * WORD if len(f.shape) > 1 else WORD
+
+    if mode == "direct" and cfg.P == 1 and use_kernel:
+        store = _alltoallv_fused(self, store, send, recv,
+                                 send_counts, recv_counts, fill)
+    else:
+        store = _alltoallv_dense(self, store, send, recv,
+                                 send_counts, recv_counts, mode, fill)
+
+    _ledger_alltoallv(self, omega_b, mode)
+    return store
+
+
+# CPU-fallback implementation switch: below this per-message word count the
+# whole store is cache-resident and a row-at-a-time fori_loop delivery (one
+# strided gather + one in-place row write per destination, ~2 payload copies
+# of traffic) beats the vectorised transpose+concat (~4 copies); above it the
+# loop's strided gathers thrash and the single fused transpose wins.
+_ROW_LOOP_MAX_WW = 768
+
+
+def _alltoallv_fused(self, store, send, recv, send_counts, recv_counts, fill):
+    """PEMS2 word-level direct delivery (Alg 7.1.1/7.1.2): slice the send
+    field's word range out of the store, deliver through the Pallas kernel
+    (counts transpose and boundary mask fused), write the recv range back.
+    On backends without compiled Pallas the delivery is a vectorised
+    transpose — or, for cache-sized ω, a row-at-a-time in-place loop."""
+    from repro.kernels.alltoallv_deliver import deliver_fused, uses_pallas
+
+    cfg = self.cfg
+    lo = store.layout
+    v = cfg.v
+    ww = lo.field_words(send) // v             # ω in store words
+
+    cnt_mask = None
+    cnt_words = None
+    if send_counts is not None and recv_counts is not None:
+        cnt_words = store.field_words_view(send_counts)      # [v, v] raw bits
+        if fill is not None:
+            cnt_mask = store.field(send_counts).reshape(v, v)
+
+    fill_word = None
+    if fill is not None:
+        # The kernel moves raw words; mask with the bit pattern of ``fill``
+        # in the send field's dtype so the receiver sees the typed value.
+        fill_word = int(_np.asarray(fill, _np.dtype(lo.field(send).dtype))
+                        .view(_np.uint32))
+
+    # The row loop writes destination rows while later iterations still read
+    # source rows, so it must not run when send and recv alias the same
+    # field; the vectorised path reads the whole block before writing.
+    if not uses_pallas() and ww <= _ROW_LOOP_MAX_WW and send != recv:
+        store = _deliver_rows_inplace(store, send, recv, cnt_mask, fill_word)
+        ct = None if cnt_words is None else jnp.swapaxes(cnt_words, 0, 1)
+    else:
+        W = store.field_words_view(send).reshape(v, v, ww)
+        out, ct = deliver_fused(W, cnt_mask, cnt_words, fill=fill_word)
+        store = store.with_field_words(recv, out.reshape(v, v * ww))
+    if cnt_words is not None:
+        cs = lo.field(send_counts).dtype
+        cr = lo.field(recv_counts).dtype
+        if cs == cr:
+            store = store.with_field_words(recv_counts, ct)
+        else:
+            store = store.with_field(
+                recv_counts, _from_words(ct, cs).astype(cr)
+            )
+    return store
+
+
+def _deliver_rows_inplace(store, send, recv, counts_i32, fill_word):
+    """Row-at-a-time direct delivery: for each destination d, gather column
+    d's message from every source context and write it straight into d's
+    recv word range.  The fori_loop carry lets XLA update the store buffer
+    in place — the closest host analogue of the thesis writing each message
+    directly into the destination context on disk."""
+    lo = store.layout
+    v = store.v
+    off_s = lo.offset(send)
+    off_r = lo.offset(recv)
+    ww = lo.field_words(send) // v
+    nw = v * ww
+
+    def body(d, dat):
+        col = lax.dynamic_slice(dat, (0, off_s + d * ww), (v, ww))
+        if fill_word is not None:
+            cnt = lax.dynamic_slice(counts_i32, (0, d), (v, 1))
+            lane = lax.broadcasted_iota(jnp.int32, (v, ww), 1)
+            col = jnp.where(lane < cnt.astype(jnp.int32),
+                            col, jnp.uint32(fill_word))
+        return lax.dynamic_update_slice(dat, col.reshape(1, nw), (d, off_r))
+
+    return ContextStore(store.layout, lax.fori_loop(0, v, body, store.data))
+
+
+def _alltoallv_dense(self, store, send, recv, send_counts, recv_counts,
+                     mode, fill):
+    """Dense-transpose data path: the PEMS1 indirect baseline, the α-chunked
+    ``P > 1`` network path, and the ``use_kernel=False`` reference."""
+    cfg = self.cfg
+    f = store.layout.field(send)
 
     M = store.field(send)                      # [v, v, ω...]
     M = M.reshape(cfg.v, cfg.v, -1)
@@ -67,18 +199,22 @@ def alltoallv(
         M = jax.lax.optimization_barrier(M)
 
     Mt = _global_transpose(self, M)            # [v, v, ω] with axes (dst, src)
-    store = store.with_field(recv, Mt.reshape((cfg.v,) + f.shape))
+    Ct = None
     if send_counts is not None and recv_counts is not None:
         C = store.field(send_counts).reshape(cfg.v, cfg.v, 1)
         if mode == "indirect":
             C = jax.lax.optimization_barrier(C)
-        Ct = _global_transpose(self, C)
+        Ct = _global_transpose(self, C)        # transposed once, reused below
+    if fill is not None:
+        lane = jax.lax.broadcasted_iota(jnp.int32, Mt.shape, 2)
+        Mt = jnp.where(lane < Ct[..., 0][..., None].astype(jnp.int32),
+                       Mt, jnp.asarray(fill, Mt.dtype))
+    store = store.with_field(recv, Mt.reshape((cfg.v,) + f.shape))
+    if Ct is not None:
         store = store.with_field(
             recv_counts, Ct.reshape(cfg.v, cfg.v).astype(
                 store.layout.field(recv_counts).dtype)
         )
-
-    _ledger_alltoallv(self, omega_b, mode)
     return store
 
 
@@ -89,7 +225,8 @@ def _global_transpose(self, M: jnp.ndarray) -> jnp.ndarray:
     if cfg.P == 1:
         return jnp.swapaxes(M, 0, 1)
 
-    from jax import shard_map
+    from .executor import _shard_map
+    shard_map = _shard_map()
 
     m = cfg.v_local
     Pn = cfg.P

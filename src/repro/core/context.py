@@ -144,11 +144,19 @@ class ContextLayout:
         if name in self._fields:
             raise ValueError(f"duplicate field {name!r}")
         f = Field(name, tuple(int(s) for s in shape), dtype)
+        if f.words == 0:
+            # A zero-dim shape would make field_words() == 0 while the
+            # allocator hands out ≥ 1 word, desynchronising the ledger's byte
+            # counts from Allocator.live_words.  Reject it outright.
+            raise ValueError(
+                f"field {name!r} has zero size (shape {f.shape}); "
+                "context fields must occupy at least one word"
+            )
         if self._alloc is not None:
-            off = self._alloc.alloc(max(f.words, 1))
+            off = self._alloc.alloc(f.words)
         else:
             off = self._next
-            self._next += max(f.words, 1)
+            self._next += f.words
         self._fields[name] = (off, f)
         return self
 
@@ -299,6 +307,40 @@ class ContextStore:
         data = jax.lax.dynamic_update_slice(
             self.data, _to_words(value), (0, off)
         )
+        return ContextStore(self.layout, data)
+
+    # word-level access --------------------------------------------------- #
+    # The fused Alltoallv path moves raw context words (the on-disk byte
+    # ranges), skipping the typed gather→bitcast→reshape round-trip: a field
+    # is just a contiguous word range of every context row.
+
+    def field_words_view(self, name: str) -> jnp.ndarray:
+        """Raw ``[v, field_words]`` uint32 view of a field's word range
+        across all contexts — no bitcast, no reshape to the field shape."""
+        off = self.layout.offset(name)
+        n = self.layout.field_words(name)
+        return jax.lax.slice(self.data, (0, off), (self.v, off + n))
+
+    def with_field_words(self, name: str, words: jnp.ndarray) -> "ContextStore":
+        """Write a field's raw word range from a ``[v, field_words]`` uint32
+        array (inverse of :meth:`field_words_view`).
+
+        The row is rebuilt with a concatenate rather than a
+        dynamic-update-slice: XLA fuses the incoming value's producer (e.g.
+        the delivery transpose) straight into the concatenate's output loop,
+        where a dynamic-update-slice materialises the operand first — on CPU
+        this is a consistent ~1.5× win for Alltoallv-sized writes.
+        """
+        off = self.layout.offset(name)
+        n = self.layout.field_words(name)
+        if words.dtype != jnp.uint32:
+            raise TypeError(f"word-level writes must be uint32, got {words.dtype}")
+        words = words.reshape((self.v, n))
+        left = jax.lax.slice(self.data, (0, 0), (self.v, off))
+        right = jax.lax.slice(
+            self.data, (0, off + n), (self.v, self.data.shape[1])
+        )
+        data = jnp.concatenate([left, words, right], axis=1)
         return ContextStore(self.layout, data)
 
 

@@ -1,3 +1,4 @@
-from .ops import deliver
+from .alltoallv_deliver import deliver_tiles
+from .ops import deliver, deliver_fused, uses_pallas
 
-__all__ = ["deliver"]
+__all__ = ["deliver", "deliver_fused", "deliver_tiles", "uses_pallas"]

@@ -10,45 +10,116 @@ table ``T`` baked into the index map), and the per-message valid length
 performed while the tile is resident instead of with a read-modify-write
 cycle.
 
-Grid: (dst, src).  One grid step moves one message.
+Grid: ``(dst, src, ω/ωt)`` — one grid step moves one 128-lane ω-tile of one
+message, so arbitrarily large messages stream through VMEM in block-sized
+pieces instead of requiring the full ω payload resident at once.  Two
+optional fusions ride along:
+
+* ``fill`` — the boundary mask.  When given, lanes past ``counts[s, d]`` are
+  overwritten with ``fill`` while the tile is in VMEM (the receiver then
+  never needs its own mask pass).  When ``None`` the tile is copied verbatim
+  and the counts input is not even streamed.
+* ``counts_payload`` — the counts matrix itself.  Alltoallv must also hand
+  every receiver the transposed counts; passing the raw counts words here
+  adds a second (1, 1)-block output ``ct[d, s] = counts_payload[s, d]`` to
+  the same ``pallas_call``, so the counts transpose costs no extra kernel
+  launch or HBM round-trip.
+
+Backend selection — compiled Pallas on TPU, the vectorised fallback on
+CPU/GPU, interpret mode for bit-exact kernel emulation in tests — lives in
+:mod:`.ops` (``deliver`` / ``deliver_fused``); this module is the kernel
+itself and always emits a ``pallas_call``.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+LANE_TILE = 128  # TPU lane width: the on-chip analogue of the disk block
 
-def _deliver_kernel(cnt_ref, msg_ref, out_ref, *, omega: int, fill):
-    cnt = cnt_ref[0, 0]
+
+def _deliver_kernel(*refs, omega_tile: int, fill, masked: bool,
+                    with_counts: bool):
+    """One grid step: move one ω-tile of message (s → d), boundary-masked."""
+    refs = list(refs)
+    cnt_ref = refs.pop(0) if masked else None
+    cp_ref = refs.pop(0) if with_counts else None
+    msg_ref = refs.pop(0)
+    out_ref = refs.pop(0)
+    ct_ref = refs.pop(0) if with_counts else None
+
     data = msg_ref[0, 0, :]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (omega,), 0)
-    out_ref[0, 0, :] = jnp.where(lane < cnt, data, fill)
+    if masked:
+        t = pl.program_id(2)
+        cnt = cnt_ref[0, 0]
+        lane = t * omega_tile + jax.lax.broadcasted_iota(
+            jnp.int32, (omega_tile,), 0
+        )
+        data = jnp.where(lane < cnt, data, jnp.asarray(fill, data.dtype))
+    out_ref[0, 0, :] = data
+    if with_counts:
+        # Idempotent across the ω-tile axis: the (d, s) block is revisited by
+        # every t step with the same value, staying resident in VMEM.
+        ct_ref[0, 0] = cp_ref[0, 0]
 
 
 def deliver_tiles(
-    msgs: jnp.ndarray,          # [v, v, ω]  (src, dst, payload)
-    counts: jnp.ndarray,        # [v, v] int32 valid lengths
+    msgs: jnp.ndarray,                       # [v, v, ω]  (src, dst, payload)
+    counts: Optional[jnp.ndarray] = None,    # [v, v] int32 valid lengths
+    counts_payload: Optional[jnp.ndarray] = None,  # [v, v] raw counts words
     *,
-    fill=0,
+    fill=None,
+    omega_tile: int = LANE_TILE,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """Returns ``out [v, v, ω]`` with ``out[d, s, :counts[s, d]] ==
-    msgs[s, d, :counts[s, d]]`` and ``fill`` elsewhere."""
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Returns ``(out, ct)`` with ``out[d, s] = msgs[s, d]`` (lanes ≥
+    ``counts[s, d]`` replaced by ``fill`` when ``fill`` is not ``None``) and
+    ``ct[d, s] = counts_payload[s, d]`` (``None`` when no payload given)."""
     v, v2, omega = msgs.shape
     assert v == v2, msgs.shape
-    kernel = functools.partial(_deliver_kernel, omega=omega, fill=fill)
-    return pl.pallas_call(
+    masked = fill is not None
+    if masked and counts is None:
+        raise ValueError("fill requires counts")
+    with_counts = counts_payload is not None
+
+    wt = min(omega_tile, omega)
+    nt = -(-omega // wt)                     # ceil: last tile may be ragged
+    kernel = functools.partial(
+        _deliver_kernel, omega_tile=wt, fill=fill, masked=masked,
+        with_counts=with_counts,
+    )
+
+    in_specs, args = [], []
+    if masked:
+        in_specs.append(pl.BlockSpec((1, 1), lambda d, s, t: (s, d)))
+        args.append(counts)
+    if with_counts:
+        in_specs.append(pl.BlockSpec((1, 1), lambda d, s, t: (s, d)))
+        args.append(counts_payload)
+    in_specs.append(pl.BlockSpec((1, 1, wt), lambda d, s, t: (s, d, t)))
+    args.append(msgs)
+
+    out_specs = [pl.BlockSpec((1, 1, wt), lambda d, s, t: (d, s, t))]
+    out_shape = [jax.ShapeDtypeStruct((v, v, omega), msgs.dtype)]
+    if with_counts:
+        out_specs.append(pl.BlockSpec((1, 1), lambda d, s, t: (d, s)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((v, v), counts_payload.dtype)
+        )
+
+    out = pl.pallas_call(
         kernel,
-        grid=(v, v),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda d, s: (s, d)),
-            pl.BlockSpec((1, 1, omega), lambda d, s: (s, d, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, omega), lambda d, s: (d, s, 0)),
-        out_shape=jax.ShapeDtypeStruct((v, v, omega), msgs.dtype),
+        grid=(v, v, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(counts, msgs)
+    )(*args)
+    if with_counts:
+        return out[0], out[1]
+    return out[0], None

@@ -1,8 +1,26 @@
-"""Public wrapper for the direct-delivery kernel."""
+"""Public wrappers for the direct-delivery kernel.
+
+Backend selection (``interpret`` tri-state) makes the kernel path the
+default rather than an opt-in:
+
+* ``interpret=None`` (auto, the default) — compiled Pallas on TPU; on
+  backends without a native Pallas lowering (CPU, and GPU in this repo's
+  toolchain) the vectorised reference path is used instead, because
+  interpret-mode execution serialises the (v, v, ω/ωt) grid and is far
+  slower than one fused XLA transpose.
+* ``interpret=True``  — Pallas interpret mode: bit-exact emulation of the
+  kernel's grid/index-map machinery on any backend (what the equivalence
+  tests run).
+* ``interpret=False`` — force the compiled Pallas kernel.
+
+``use_kernel=False`` bypasses the kernel entirely (pure-jnp reference),
+which is what the seed implementation did; it is kept so equivalence can be
+asserted end-to-end (``psrs_sort(..., use_kernel=...)``).
+"""
 
 from __future__ import annotations
 
-import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -10,13 +28,62 @@ import jax.numpy as jnp
 from .alltoallv_deliver import deliver_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel", "fill"))
+def uses_pallas(interpret: Optional[bool] = None) -> bool:
+    """Whether delivery would emit a ``pallas_call`` for this ``interpret``
+    setting on the current backend.  The single source of truth for the
+    backend dispatch — the collective layer consults it too, so its
+    CPU-fallback heuristics can never desync from the kernel dispatch."""
+    if interpret is None:
+        return jax.default_backend() == "tpu"
+    return True
+
+
+def _dispatch(msgs, counts, counts_payload, *, fill, interpret, use_kernel):
+    # Deliberately NOT jitted: the collective layer calls this inside its own
+    # trace, and a nested jit boundary stops XLA from fusing the delivery
+    # transpose into the store-row rebuild (~1.4× regression at small ω).
+    # Direct (eager) calls from tests trace per-op, which is fine there.
+    if use_kernel and uses_pallas(interpret):
+        return deliver_tiles(
+            msgs, counts, counts_payload, fill=fill,
+            interpret=bool(interpret),
+        )
+    # Vectorised reference path: one fused transpose(+mask), the CPU/GPU
+    # fallback.  Semantically identical to the kernel.
+    from .ref import deliver_fused_ref
+    return deliver_fused_ref(msgs, counts, counts_payload, fill=fill)
+
+
 def deliver(msgs: jnp.ndarray, counts: jnp.ndarray, *, fill=0,
-            interpret: bool = False, use_kernel: bool = True) -> jnp.ndarray:
+            interpret: Optional[bool] = None,
+            use_kernel: bool = True) -> jnp.ndarray:
     """PEMS2 direct delivery of ``msgs [v, v, ω]`` with valid lengths
-    ``counts [v, v]`` → ``[v(dst), v(src), ω]``."""
-    if not use_kernel:
-        from .ref import deliver_ref
-        return deliver_ref(msgs, counts, fill=fill)
-    return deliver_tiles(msgs, counts.astype(jnp.int32), fill=fill,
-                         interpret=interpret)
+    ``counts [v, v]`` → ``[v(dst), v(src), ω]``, lanes past the count set to
+    ``fill``."""
+    out, _ = _dispatch(
+        msgs, counts.astype(jnp.int32), None, fill=fill, interpret=interpret,
+        use_kernel=use_kernel,
+    )
+    return out
+
+
+def deliver_fused(
+    msgs: jnp.ndarray,                        # [v, v, ω] payload (any 4-byte dtype)
+    counts: Optional[jnp.ndarray] = None,     # [v, v] int32 mask lengths
+    counts_payload: Optional[jnp.ndarray] = None,  # [v, v] raw counts words
+    *,
+    fill=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Delivery with the optional fusions the collective layer uses: the
+    boundary mask only when ``fill`` is given, and the counts transpose as a
+    second output of the same kernel call.  Returns ``(out, ct)``."""
+    if fill is not None and counts is None:
+        raise ValueError("fill requires counts")
+    return _dispatch(
+        msgs,
+        None if fill is None else counts.astype(jnp.int32),
+        counts_payload,
+        fill=fill, interpret=interpret, use_kernel=use_kernel,
+    )

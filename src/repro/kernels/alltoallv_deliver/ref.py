@@ -1,4 +1,6 @@
-"""Oracle for direct delivery: masked transpose."""
+"""Oracles for direct delivery: masked transpose (+ fused counts)."""
+
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -8,4 +10,24 @@ def deliver_ref(msgs: jnp.ndarray, counts: jnp.ndarray, *, fill=0) -> jnp.ndarra
     t = jnp.swapaxes(msgs, 0, 1)                 # [dst, src, ω]
     ct = jnp.swapaxes(counts, 0, 1)              # [dst, src]
     lane = jnp.arange(omega)[None, None, :]
-    return jnp.where(lane < ct[..., None], t, fill)
+    # Cast fill explicitly: a raw uint32 bit pattern > 2**31 would overflow
+    # python-int weak typing against an int32/uint32 payload.
+    return jnp.where(lane < ct[..., None], t, jnp.asarray(fill, msgs.dtype))
+
+
+def deliver_fused_ref(
+    msgs: jnp.ndarray,
+    counts: Optional[jnp.ndarray] = None,
+    counts_payload: Optional[jnp.ndarray] = None,
+    *,
+    fill=None,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Oracle for :func:`..ops.deliver_fused`: plain transpose when ``fill``
+    is ``None``, masked transpose otherwise, plus the transposed counts
+    payload."""
+    if fill is None:
+        out = jnp.swapaxes(msgs, 0, 1)
+    else:
+        out = deliver_ref(msgs, counts, fill=fill)
+    ct = None if counts_payload is None else jnp.swapaxes(counts_payload, 0, 1)
+    return out, ct

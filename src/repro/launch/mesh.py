@@ -9,15 +9,25 @@ import, and smoke tests must keep seeing 1 device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with every axis in Auto mode.  ``AxisType`` only
+    exists on newer jax; older releases have no explicit-axis meshes, so
+    Auto is already the (only) behaviour and the kwarg is simply omitted."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def data_axes_of(mesh) -> tuple:

@@ -28,7 +28,7 @@ from .common import INT_MAX, group_by_dest
 
 
 def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
-           mode: str, local_sort):
+           mode: str, local_sort, use_kernel: bool = True):
     lo = (
         ContextLayout()
         .add("data", (n_v,), jnp.int32)
@@ -82,10 +82,12 @@ def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
         )
 
     def merge(rho, ctx):
+        # The boundary mask is fused into delivery (alltoallv fill=INT_MAX):
+        # lanes past brcnt arrive as INT_MAX, so the received buckets merge
+        # as-is — no re-mask pass over the 2n/v received words.
         recv = ctx.get("brecv")              # [v, cap]
         cnt = ctx.get("brcnt")               # [v]
-        mask = jnp.arange(cap)[None, :] < cnt[:, None]
-        flat = jnp.where(mask, recv, INT_MAX).reshape(-1)
+        flat = recv.reshape(-1)
         merged = local_sort(flat)[:rcap]
         total = cnt.sum()
         over = (total > rcap).astype(jnp.int32)
@@ -107,7 +109,7 @@ def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
                                reads=["data", "gsplit"],
                                writes=["bsend", "bscnt", "oflow"])
         store = pems.alltoallv(store, "bsend", "brecv", "bscnt", "brcnt",
-                               mode=mode)
+                               mode=mode, fill=INT_MAX, use_kernel=use_kernel)
         store = pems.superstep(store, merge,
                                reads=["brecv", "brcnt", "oflow"],
                                writes=["result", "rcount", "oflow"])
@@ -127,13 +129,16 @@ def psrs_sort(
     rcap: Optional[int] = None,
     local_sort=jnp.sort,
     return_pems: bool = False,
+    use_kernel: bool = True,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
     ``mode`` selects PEMS2 direct delivery or the PEMS1 indirect baseline for
     the final Alltoallv; ``cap`` is the per-(sender,dest) message capacity ω
     (defaults to the always-safe n/v) and ``rcap`` the per-receiver capacity
-    (defaults to the PSRS guarantee 2n/v).
+    (defaults to the PSRS guarantee 2n/v).  ``use_kernel`` toggles the fused
+    Pallas delivery path in the final Alltoallv (results are bit-identical
+    either way; kept for equivalence testing).
     """
     keys = jnp.asarray(keys, jnp.int32)
     n = keys.shape[0]
@@ -143,7 +148,8 @@ def psrs_sort(
     cap = n_v if cap is None else cap
     rcap = 2 * n_v if rcap is None else rcap
 
-    pems, program = _build(v, k, n_v, cap, rcap, driver, mode, local_sort)
+    pems, program = _build(v, k, n_v, cap, rcap, driver, mode, local_sort,
+                           use_kernel=use_kernel)
     result, rcount, oflow = program(keys.reshape(v, n_v))
     result = np.asarray(result)
     rcount = np.asarray(rcount)[:, 0]

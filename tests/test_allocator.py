@@ -3,7 +3,7 @@ live-bytes accounting that lets the swap engine skip dead regions."""
 
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import Allocator, ContextLayout
 
@@ -101,6 +101,25 @@ def test_layout_drop_frees_and_reuses():
     lo.add("c", (16,), jnp.float32)
     assert lo.offset("c") == 0         # reused the freed region
     assert lo.mu_bytes == 64 * 4       # μ is the fixed capacity
+
+
+def test_layout_rejects_zero_size_fields():
+    """Regression: a zero-dim shape used to report field_words() == 0 while
+    the allocator reserved max(words, 1) == 1, so ledger byte counts and
+    Allocator.live_words disagreed.  Zero-size fields are now an error."""
+    lo = ContextLayout(capacity_words=16)
+    with pytest.raises(ValueError):
+        lo.add("empty", (0,), jnp.int32)
+    with pytest.raises(ValueError):
+        lo.add("empty2", (4, 0), jnp.float32)
+    # The failed adds must not leak allocations or register the name.
+    assert lo.live_words == 0
+    lo.add("ok", (16,), jnp.int32)          # full capacity still available
+    assert lo.live_words == 16
+    # Scalar (shape ()) fields still occupy one word.
+    lo2 = ContextLayout()
+    lo2.add("scalar", (), jnp.int32)
+    assert lo2.field_words("scalar") == 1
 
 
 def test_layout_rejects_narrow_dtypes():

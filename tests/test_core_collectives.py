@@ -1,6 +1,7 @@
 """Behavioural tests for the PEMS core: executor rounds, drivers, collectives
 vs numpy oracles, and multi-real-processor (P>1) equivalence via subprocess."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -9,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import Ctx, ContextLayout, Pems, PemsConfig
 
@@ -124,6 +125,106 @@ def test_alltoallv_direct_equals_indirect():
     # ...and PEMS2 moves strictly fewer bytes (Cor 7.1.4) once ω ≳ B is not
     # required because the boundary cache charge is included:
     assert a.ledger.io_total != b.ledger.io_total
+
+
+@pytest.mark.parametrize("v,k,omega", [
+    (4, 1, 2), (8, 2, 4), (6, 3, 129),
+    (4, 1, 1024),   # ω past the row-loop cutover: vectorised delivery path
+])
+def test_alltoallv_fused_equals_dense(v, k, omega):
+    """The word-level kernel path (use_kernel=True, the default) is
+    bit-identical to the seed dense-transpose path, payload and counts,
+    and charges the same ledger events."""
+    outs, ledgers = [], []
+    for use_kernel in (True, False):
+        lo = make_layout(v, omega)
+        pems = Pems(PemsConfig(v=v, k=k), lo)
+        store = pems.init()
+        store = pems.superstep(store, lambda r, c: fill_send(r, c, v, omega))
+        store = pems.alltoallv(store, "send", "recv", "scnt", "rcnt",
+                               use_kernel=use_kernel)
+        outs.append((np.asarray(store.field("recv")),
+                     np.asarray(store.field("rcnt"))))
+        ledgers.append(pems.ledger.io_total)
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    assert ledgers[0] == ledgers[1]
+
+
+@pytest.mark.parametrize("mode", ["direct", "indirect"])
+@pytest.mark.parametrize("use_kernel", [True, False])
+@pytest.mark.parametrize("omega", [5, 1024])   # row-loop and vectorised paths
+def test_alltoallv_fill_fuses_boundary_mask(mode, use_kernel, omega):
+    """fill=x masks lanes past counts[s, d] during delivery (the fused
+    boundary fix-up), identically on every implementation path."""
+    v, k = 6, 2
+    lo = make_layout(v, omega)
+    pems = Pems(PemsConfig(v=v, k=k), lo)
+    store = pems.init()
+    store = pems.superstep(store, lambda r, c: fill_send(r, c, v, omega))
+    store = pems.alltoallv(store, "send", "recv", "scnt", "rcnt",
+                           mode=mode, fill=-42, use_kernel=use_kernel)
+    S = np.asarray(store.field("send"))
+    C = np.asarray(store.field("scnt"))
+    R = np.asarray(store.field("recv"))
+    lane = np.arange(omega)[None, None, :]
+    want = np.where(lane < C.T[:, :, None], np.swapaxes(S, 0, 1), -42)
+    np.testing.assert_array_equal(R, want)
+    np.testing.assert_array_equal(np.asarray(store.field("rcnt")), C.T)
+
+
+def test_alltoallv_send_recv_aliasing():
+    """send == recv (in-place shuffle) must match the dense path — the
+    row-loop delivery is skipped for aliased fields since it reads source
+    rows after overwriting them."""
+    v, k, omega = 6, 2, 4
+    outs = []
+    for use_kernel in (True, False):
+        lo = make_layout(v, omega)
+        pems = Pems(PemsConfig(v=v, k=k), lo)
+        store = pems.init()
+        store = pems.superstep(store, lambda r, c: fill_send(r, c, v, omega))
+        S = np.asarray(store.field("send"))
+        store = pems.alltoallv(store, "send", "send", use_kernel=use_kernel)
+        outs.append(np.asarray(store.field("send")))
+        np.testing.assert_array_equal(outs[-1], np.swapaxes(S, 0, 1))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_alltoallv_fill_requires_counts():
+    lo = make_layout(4, 2)
+    pems = Pems(PemsConfig(v=4), lo)
+    with pytest.raises(ValueError):
+        pems.alltoallv(pems.init(), "send", "recv", fill=0)
+
+
+def test_field_words_roundtrip():
+    """ContextStore word-level API: field_words_view/with_field_words are
+    exact inverses and bit-compatible with the typed accessors."""
+    from repro.core import ContextStore
+    v = 4
+    lo = make_layout(v, 3)
+    pems = Pems(PemsConfig(v=v), lo)
+    store = pems.init(
+        lambda rho: {"data": rho * jnp.ones(16, jnp.int32),
+                     "send": jnp.full((v, 3), -rho, jnp.int32)}
+    )
+    W = store.field_words_view("send")
+    assert W.shape == (v, v * 3) and W.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(W).view(np.int32).reshape(v, v, 3),
+        np.asarray(store.field("send")),
+    )
+    store2 = store.with_field_words("recv", W)
+    np.testing.assert_array_equal(
+        np.asarray(store2.field("recv")), np.asarray(store.field("send"))
+    )
+    # Other fields untouched.
+    np.testing.assert_array_equal(
+        np.asarray(store2.field("data")), np.asarray(store.field("data"))
+    )
+    with pytest.raises(TypeError):
+        store.with_field_words("recv", W.astype(jnp.int32))
 
 
 # --------------------------------------------------------------------------- #
@@ -268,7 +369,10 @@ def test_multiprocessor_alltoallv_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _P_GT_1],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # Without an explicit platform, jax probes for TPUs via the
+             # cloud metadata URL and stalls for minutes off-cloud.
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd="/root/repo",
     )
     assert "MULTIPROC_OK" in r.stdout, r.stderr[-3000:]

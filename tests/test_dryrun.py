@@ -68,6 +68,9 @@ def test_dryrun_compiles_on_both_production_meshes():
         [sys.executable, "-c", _DRYRUN],
         capture_output=True, text=True, timeout=900,
         env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             # Without an explicit platform, jax probes for TPUs via the
+             # cloud metadata URL and stalls for minutes off-cloud.
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
              },
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )

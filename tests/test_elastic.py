@@ -36,8 +36,8 @@ _ELASTIC = textwrap.dedent("""
     from repro.checkpoint import CheckpointManager
 
     mgr = CheckpointManager("{d}")
-    mesh = jax.make_mesh(({n},), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto(({n},), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     like = {{"w": jnp.zeros((16, 4))}}
     if {save}:
@@ -58,7 +58,10 @@ def _run(code):
     return subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
         timeout=300,
-        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "")},
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", ""),
+             # Without an explicit platform, jax probes for TPUs via the
+             # cloud metadata URL and stalls for minutes off-cloud.
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
 

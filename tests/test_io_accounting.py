@@ -8,7 +8,7 @@ Fig 6.2 disk-space table."""
 
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import ContextLayout, Pems, PemsConfig, analysis
 

@@ -3,7 +3,7 @@ oracles, including hypothesis property sweeps and driver/mode cross-checks."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.pems_apps import euler_tour, list_rank, prefix_sum, psrs_sort
 

@@ -74,9 +74,13 @@ def _tiny_setup(microbatches=1, grad_compress=False):
 
 
 def test_train_loss_decreases():
+    # Train on one fixed batch: fresh hash-random tokens every step have no
+    # learnable structure (loss would sit at the irreducible ln(vocab)), but
+    # memorising a batch still exercises the full model/optimizer/step path.
     _, state, step, data = _tiny_setup()
+    batch = synthetic_batch(data, 0)
     losses = []
-    for i, batch in zip(range(30), synthetic_batches(data)):
+    for i in range(30):
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] - 0.2, losses[::10]
@@ -101,8 +105,9 @@ def test_microbatch_equals_full_batch_grads():
 
 def test_grad_compression_still_converges():
     _, state, step, data = _tiny_setup(grad_compress=True)
+    batch = synthetic_batch(data, 0)
     losses = []
-    for i, batch in zip(range(30), synthetic_batches(data)):
+    for i in range(30):
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] - 0.2, losses[::10]
@@ -224,8 +229,8 @@ def test_param_pspecs_cover_model():
     cfg = get_config("kimi-k2-1t-a32b").smoke()
     model = Model(cfg)
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     rules = ShardingRules(mesh=mesh)
     specs = param_pspecs(rules, params)
     flat_p = jax.tree.leaves(params)
