@@ -1,8 +1,15 @@
-"""Fig 6.2: disk-space requirements, PEMS1 vs PEMS2 (exact table)."""
+"""Fig 6.2: disk-space requirements, PEMS1 vs PEMS2 (exact table) — plus the
+real thing: a memmap-backed store's file on disk, created sparse at exactly
+vμ (§6.3), with allocated blocks growing only as live ranges are touched."""
 
 from __future__ import annotations
 
-from repro.core import analysis
+import os
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.core import ContextLayout, Pems, PemsConfig, WORD, analysis
 from .common import emit
 
 
@@ -14,3 +21,38 @@ def run():
              f"v={v};required={req // GiB}GiB;pems1_per_proc={p1p // GiB}GiB;"
              f"pems1_total={p1t // GiB}GiB;pems2_per_proc={p2p // GiB}GiB;"
              f"pems2_total={p2t // GiB}GiB")
+
+    # Real backing file: vμ on disk, sparse until the swap engine touches it.
+    v, k, capacity = 16, 4, 1 << 16            # μ = 256 KiB, vμ = 4 MiB
+    lo = (ContextLayout(capacity_words=capacity)
+          .add("data", (1 << 14,), jnp.int32)  # only 1/4 of μ is live
+          .add("acc", (1 << 14,), jnp.int32))
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ctx.bin")
+        pems = Pems(PemsConfig(v=v, k=k, tier="memmap", backing_path=path),
+                    lo)
+        store = pems.init()
+        size0, blocks0 = _stat(path)
+        store = pems.superstep(
+            store, lambda rho, c: c.set("acc", c.get("data") + rho))
+        store.flush()
+        size1, blocks1 = _stat(path)
+        led = pems.ledger
+        emit("disk_space_memmap_real", 0.0,
+             f"file_bytes={size1};required={v * capacity * WORD};"
+             f"allocated_before={blocks0};allocated_after={blocks1};"
+             f"live_fraction={lo.live_words / lo.words:.2f};"
+             f"ledger_disk_read={led.disk_read_bytes};"
+             f"ledger_disk_write={led.disk_write_bytes}")
+        assert size1 == v * capacity * WORD
+        assert led.disk_write_bytes == v * lo.live_words * WORD
+
+
+def _stat(path):
+    st = os.stat(path)
+    return st.st_size, st.st_blocks * 512
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,78 @@
+"""CI benchmark regression gate for the fused Alltoallv kernel path.
+
+Compares a fresh ``BENCH_alltoallv.smoke.json`` against the committed
+baseline using the *paired-sample* statistic: ``speedup_vs_dense`` is the
+median of per-iteration (dense / fused) wall-time ratios, where each pair
+ran back-to-back in the same process — machine speed cancels, so the ratio
+transfers across runner generations.  The gate fails when the kernel path
+loses more than ``--threshold`` (default 30%) of its advantage over the
+dense path on any matched config.
+
+A machine-class guard skips the comparison (exit 0 with a notice) when the
+two files disagree on backend or sweep shape — a CPU baseline says nothing
+about a TPU runner.
+
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/baseline.json --new BENCH_alltoallv.smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--threshold", type=float, default=1.30,
+                    help="max allowed paired-ratio regression factor")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    new = load(args.new)
+
+    # Machine-class guard: paired ratios transfer across machines of the
+    # same class, not across backends (or differently-shaped sweeps).
+    for key in ("benchmark", "backend", "v", "smoke"):
+        if base.get(key) != new.get(key):
+            print(f"SKIP: machine-class mismatch on {key!r}: "
+                  f"baseline={base.get(key)!r} new={new.get(key)!r}")
+            return 0
+
+    base_cfgs = {(c["v"], c["n_words"]): c for c in base["configs"]}
+    new_cfgs = {(c["v"], c["n_words"]): c for c in new["configs"]}
+    matched = sorted(set(base_cfgs) & set(new_cfgs))
+    if not matched:
+        print("FAIL: no matched configs between baseline and new run")
+        return 1
+
+    failures = []
+    for key in matched:
+        b, n = base_cfgs[key], new_cfgs[key]
+        floor = b["speedup_vs_dense"] / args.threshold
+        status = "ok" if n["speedup_vs_dense"] >= floor else "REGRESSED"
+        print(f"v={key[0]} n_words={key[1]:>8}: paired speedup "
+              f"baseline={b['speedup_vs_dense']:.3f} "
+              f"new={n['speedup_vs_dense']:.3f} floor={floor:.3f} [{status}]")
+        if status != "ok":
+            failures.append(key)
+
+    if failures:
+        print(f"FAIL: kernel path regressed >{(args.threshold - 1) * 100:.0f}% "
+              f"vs committed baseline on configs {failures}")
+        return 1
+    print(f"OK: kernel path within {(args.threshold - 1) * 100:.0f}% of the "
+          f"committed baseline on all {len(matched)} configs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,13 @@ Designed for the preemption model of large TPU fleets:
   processes — tested).
 * **Async save**: the device→host copy happens synchronously (consistency),
   the file write on a background thread (training continues).
+* **Memmap-aware**: ``np.memmap`` leaves (e.g. a PEMS memmap-backed context
+  store) are streamed to/from the checkpoint file in bounded chunks — a
+  ``v·mu`` out-of-core store checkpoints and restores without ever being
+  materialized on device (or fully in host RAM).  On restore, a memmap leaf
+  in ``like`` is filled *in place* and returned as-is.  Note: a non-blocking
+  ``save`` snapshots memmap leaves lazily on the writer thread — do not
+  mutate the backing store until ``wait()``.
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -40,8 +47,13 @@ class CheckpointManager:
     def save(self, step: int, state: Any, blocking: bool = True) -> str:
         """Snapshot ``state`` (any pytree of arrays) at ``step``."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(state)
-        # Device→host transfer now, so training can mutate buffers after.
-        host = [(self._key_str(path), np.asarray(leaf)) for path, leaf in flat]
+        # Snapshot now (device→host transfer / host copy), so training can
+        # mutate buffers after.  np.asarray aliases plain ndarrays, so force
+        # the copy — otherwise a host-tier backing store mutated before
+        # wait() would tear the background write.  Memmap leaves are the
+        # exception: they stay by reference and stream at write time instead
+        # of copying v·mu into RAM (do not mutate them until wait()).
+        host = [(self._key_str(path), _snapshot(leaf)) for path, leaf in flat]
         self.wait()
 
         def write():
@@ -53,13 +65,19 @@ class CheckpointManager:
             names = []
             for i, (key, arr) in enumerate(host):
                 fn = f"arr_{i:05d}.npy"
-                with open(os.path.join(tmp, fn), "wb") as f:
-                    np.save(f, arr)
-                    f.flush()
-                    os.fsync(f.fileno())
+                path = os.path.join(tmp, fn)
+                is_mm = isinstance(arr, np.memmap)
+                if is_mm:
+                    _stream_to_npy(arr, path)
+                else:
+                    with open(path, "wb") as f:
+                        np.save(f, arr)
+                        f.flush()
+                        os.fsync(f.fileno())
                 names.append({"key": key, "file": fn,
                               "shape": list(arr.shape),
-                              "dtype": str(arr.dtype)})
+                              "dtype": str(arr.dtype),
+                              "memmap": is_mm})
             manifest = {"step": step, "arrays": names,
                         "time": time.time(), "version": 1}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -106,24 +124,43 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step:012d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        arrays = []
-        for meta in manifest["arrays"]:
-            arr = np.load(os.path.join(d, meta["file"]))
-            if list(arr.shape) != meta["shape"]:
-                raise IOError(f"shape mismatch in {meta['file']}")
-            arrays.append(arr)
+        metas = manifest["arrays"]
         if like is None:
+            arrays = []
+            for meta in metas:
+                arr = np.load(os.path.join(d, meta["file"]))
+                if list(arr.shape) != meta["shape"]:
+                    raise IOError(f"shape mismatch in {meta['file']}")
+                arrays.append(arr)
             return arrays
         flat, treedef = jax.tree_util.tree_flatten(like)
-        if len(flat) != len(arrays):
+        if len(flat) != len(metas):
             raise IOError(
-                f"checkpoint has {len(arrays)} leaves, state has {len(flat)}")
-        if shardings is not None:
-            flat_sh = treedef.flatten_up_to(shardings)
-            arrays = [jax.device_put(a, s)
-                      for a, s in zip(arrays, flat_sh)]
-        else:
-            arrays = [jax.device_put(a) for a in arrays]
+                f"checkpoint has {len(metas)} leaves, state has {len(flat)}")
+        flat_sh = (treedef.flatten_up_to(shardings)
+                   if shardings is not None else [None] * len(flat))
+        arrays = []
+        for meta, leaf, sh in zip(metas, flat, flat_sh):
+            path = os.path.join(d, meta["file"])
+            if isinstance(leaf, np.memmap):
+                # Out-of-core leaf: stream the checkpoint into the caller's
+                # backing store in bounded chunks — never on device, never
+                # fully in RAM.  The leaf is filled in place.
+                src = np.load(path, mmap_mode="r")
+                if src.shape != leaf.shape or src.dtype != leaf.dtype:
+                    raise IOError(
+                        f"memmap leaf mismatch in {meta['file']}: checkpoint "
+                        f"{src.shape}/{src.dtype} vs store "
+                        f"{leaf.shape}/{leaf.dtype}")
+                _chunked_copy(src, leaf)
+                leaf.flush()
+                arrays.append(leaf)
+                continue
+            arr = np.load(path)
+            if list(arr.shape) != meta["shape"]:
+                raise IOError(f"shape mismatch in {meta['file']}")
+            arrays.append(jax.device_put(arr) if sh is None
+                          else jax.device_put(arr, sh))
         return jax.tree_util.tree_unflatten(treedef, arrays)
 
     def _steps(self) -> List[int]:
@@ -145,3 +182,39 @@ class CheckpointManager:
     @staticmethod
     def _key_str(path) -> str:
         return jax.tree_util.keystr(path)
+
+
+def _snapshot(leaf):
+    if isinstance(leaf, np.memmap):
+        return leaf
+    arr = np.asarray(leaf)
+    return arr.copy() if arr is leaf else arr
+
+
+_STREAM_CHUNK_BYTES = 64 << 20   # bound on resident bytes while streaming
+
+
+def _chunked_copy(src, dst) -> None:
+    """Copy array ``src`` into ``dst`` in ≤ 64 MiB chunks along axis 0
+    (whole-array for 0-d), keeping the resident footprint bounded."""
+    if src.ndim == 0:
+        dst[...] = src
+        return
+    row = max(1, int(np.prod(src.shape[1:], dtype=np.int64))) * src.itemsize
+    step = max(1, _STREAM_CHUNK_BYTES // row)
+    for i in range(0, src.shape[0], step):
+        dst[i:i + step] = src[i:i + step]
+
+
+def _stream_to_npy(arr: np.memmap, path: str) -> None:
+    """Write a memmap to ``.npy`` by chunked copy (no full-RAM staging),
+    fsync'd like the regular save path."""
+    out = np.lib.format.open_memmap(path, mode="w+", dtype=arr.dtype,
+                                    shape=arr.shape)
+    try:
+        _chunked_copy(arr, out)
+        out.flush()
+    finally:
+        del out
+    with open(path, "rb+") as f:
+        os.fsync(f.fileno())

@@ -9,6 +9,13 @@ Public API::
 """
 
 from . import analysis
+from .backing import (
+    HostBacking,
+    MemmapBacking,
+    TIERS,
+    TieredStore,
+    make_backing,
+)
 from .context import (
     Allocator,
     Ctx,
@@ -20,7 +27,7 @@ from .context import (
     layout,
 )
 from .executor import DRIVERS, Pems, PemsConfig
-from .iostats import IOLedger
+from .iostats import IOLedger, TierStats
 
 __all__ = [
     "Allocator",
@@ -29,11 +36,17 @@ __all__ = [
     "ContextStore",
     "DRIVERS",
     "Field",
+    "HostBacking",
     "IOLedger",
+    "MemmapBacking",
     "Pems",
     "PemsConfig",
+    "TIERS",
+    "TieredStore",
+    "TierStats",
     "WORD",
     "analysis",
     "init_store",
     "layout",
+    "make_backing",
 ]

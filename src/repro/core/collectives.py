@@ -51,6 +51,7 @@ import numpy as _np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .backing import TieredStore
 from .context import ContextStore, WORD, _from_words
 
 
@@ -90,7 +91,10 @@ def alltoallv(
         raise ValueError("fill requires send_counts/recv_counts")
     omega_b = int(_np.prod(f.shape[1:], dtype=_np.int64)) * WORD if len(f.shape) > 1 else WORD
 
-    if mode == "direct" and cfg.P == 1 and use_kernel:
+    if isinstance(store, TieredStore):
+        store = _alltoallv_host(self, store, send, recv,
+                                send_counts, recv_counts, fill)
+    elif mode == "direct" and cfg.P == 1 and use_kernel:
         store = _alltoallv_fused(self, store, send, recv,
                                  send_counts, recv_counts, fill)
     else:
@@ -218,6 +222,29 @@ def _alltoallv_dense(self, store, send, recv, send_counts, recv_counts,
     return store
 
 
+def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
+    """Backing-tier Alltoallv: pure host-side data movement over the
+    host/memmap store — messages move straight between context rows of the
+    backing array, the closest real-world analogue of the thesis writing
+    each message directly into the destination context on disk.  Bit-
+    identical to the device paths (copies only, no arithmetic)."""
+    v = self.cfg.v
+    lo = store.layout
+    S = store.field(send).reshape(v, v, -1)        # host copy of send field
+    Rt = _np.swapaxes(S, 0, 1)                     # (dst, src, ω)
+    Ct = None
+    if send_counts is not None and recv_counts is not None:
+        Ct = store.field(send_counts).reshape(v, v).T
+    if fill is not None:
+        lane = _np.arange(Rt.shape[2])[None, None, :]
+        Rt = _np.where(lane < Ct[:, :, None].astype(_np.int32),
+                       Rt, _np.asarray(fill, Rt.dtype))
+    store.with_field(recv, Rt.reshape((v,) + lo.field(recv).shape))
+    if Ct is not None:
+        store.with_field(recv_counts, Ct.astype(lo.field(recv_counts).dtype))
+    return store
+
+
 def _global_transpose(self, M: jnp.ndarray) -> jnp.ndarray:
     """[v(src), v(dst), w] → [v(dst), v(src), w], sharded on axis 0 over the
     vp axis when P > 1 (α-chunked all_to_all, Alg 7.1.3)."""
@@ -298,10 +325,20 @@ def _ledger_alltoallv(self, omega_b: int, mode: str) -> None:
 def bcast(self, store: ContextStore, field: str, root: int = 0) -> ContextStore:
     """EM-Bcast (Alg 7.2.1): root's field value lands in every context."""
     cfg = self.cfg
-    vals = store.field(field)                  # [v, ...]
-    val = lax.dynamic_index_in_dim(vals, root, axis=0, keepdims=False)
-    out = jnp.broadcast_to(val, vals.shape)
-    store = store.with_field(field, out)
+    if isinstance(store, TieredStore):
+        # Read only the root context's field range off the backing store.
+        off = store.layout.offset(field)
+        nw = store.layout.field_words(field)
+        row = _np.ascontiguousarray(store.backing.arr[root, off:off + nw])
+        store.backing.arr[:, off:off + nw] = row[None, :]
+        if store.tier == "memmap":
+            self.ledger.add_disk_read(row.nbytes)
+            self.ledger.add_disk_write(store.v * row.nbytes)
+    else:
+        vals = store.field(field)              # [v, ...]
+        val = lax.dynamic_index_in_dim(vals, root, axis=0, keepdims=False)
+        out = jnp.broadcast_to(val, vals.shape)
+        store = store.with_field(field, out)
 
     B = cfg.block_bytes
     mu = self.layout.live_bytes
@@ -326,10 +363,19 @@ def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
     fr = store.layout.field(recv)
     if fr.shape != (cfg.v,) + fs.shape:
         raise ValueError(f"recv must be [v, *send.shape]; got {fr.shape}")
-    A = store.field(send)                      # [v, ...] gathered result
-    R = store.field(recv)                      # [v, v, ...]
-    R = R.at[root].set(A.astype(fr.dtype))
-    store = store.with_field(recv, R)
+    if isinstance(store, TieredStore):
+        A = store.field(send)                  # host copy [v, ...]
+        w = _np.ascontiguousarray(A.astype(_np.dtype(fr.dtype))).reshape(-1)
+        off = store.layout.offset(recv)
+        # Only the root context's recv range is touched on the backing store.
+        store.backing.arr[root, off:off + w.size] = w.view(_np.uint32)
+        if store.tier == "memmap":
+            self.ledger.add_disk_write(w.nbytes)
+    else:
+        A = store.field(send)                  # [v, ...] gathered result
+        R = store.field(recv)                  # [v, v, ...]
+        R = R.at[root].set(A.astype(fr.dtype))
+        store = store.with_field(recv, R)
 
     B = cfg.block_bytes
     omega_b = self.layout.field_bytes(send)
@@ -346,11 +392,17 @@ def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
 def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
     """Every VP receives every VP's ``send`` into ``recv`` ([v, ω])."""
     cfg = self.cfg
-    A = store.field(send)                      # [v, ...]
-    out = jnp.broadcast_to(
-        A[None], (cfg.v,) + A.shape
-    ).astype(store.layout.field(recv).dtype)
-    store = store.with_field(recv, out)
+    if isinstance(store, TieredStore):
+        A = store.field(send)                  # host copy [v, ...]
+        out = _np.broadcast_to(A[None], (cfg.v,) + A.shape).astype(
+            _np.dtype(store.layout.field(recv).dtype))
+        store.with_field(recv, out)
+    else:
+        A = store.field(send)                  # [v, ...]
+        out = jnp.broadcast_to(
+            A[None], (cfg.v,) + A.shape
+        ).astype(store.layout.field(recv).dtype)
+        store = store.with_field(recv, out)
     # An allgather is an Alltoallv with equal messages — same ledger shape.
     _ledger_alltoallv(self, self.layout.field_bytes(send), "direct")
     return store
@@ -360,23 +412,41 @@ def reduce(self, store: ContextStore, field: str, out_field: str,
            op: str = "add", root: int = 0) -> ContextStore:
     """EM-Reduce (Alg 7.4.1): vectorised reduction of each VP's ``field``
     ([n]) into the root's ``out_field`` ([n])."""
-    vals = store.field(field)                  # [v, n]
-    red = _reduce_op(op)(vals)
-    R = store.field(out_field)
-    R = R.at[root].set(red.astype(R.dtype))
-    store = store.with_field(out_field, R)
+    if isinstance(store, TieredStore):
+        red = _tiered_reduce(self, store, field, op)
+        fr = store.layout.field(out_field)
+        w = _np.ascontiguousarray(
+            red.astype(_np.dtype(fr.dtype))).reshape(-1)
+        off = store.layout.offset(out_field)
+        store.backing.arr[root, off:off + w.size] = w.view(_np.uint32)
+        if store.tier == "memmap":
+            self.ledger.add_disk_write(w.nbytes)
+    else:
+        vals = store.field(field)              # [v, n]
+        red = _reduce_op(op)(vals)
+        R = store.field(out_field)
+        R = R.at[root].set(red.astype(R.dtype))
+        store = store.with_field(out_field, R)
     _ledger_reduce(self, self.layout.field_bytes(out_field))
     return store
 
 
 def allreduce(self, store: ContextStore, field: str, out_field: str,
               op: str = "add") -> ContextStore:
-    vals = store.field(field)
-    red = _reduce_op(op)(vals)
-    out = jnp.broadcast_to(red[None], vals.shape)
-    store = store.with_field(
-        out_field, out.astype(store.layout.field(out_field).dtype)
-    )
+    if isinstance(store, TieredStore):
+        red = _tiered_reduce(self, store, field, op)
+        out = _np.broadcast_to(red[None], (store.v,) + red.shape)
+        store.with_field(
+            out_field,
+            out.astype(_np.dtype(store.layout.field(out_field).dtype)),
+        )
+    else:
+        vals = store.field(field)
+        red = _reduce_op(op)(vals)
+        out = jnp.broadcast_to(red[None], vals.shape)
+        store = store.with_field(
+            out_field, out.astype(store.layout.field(out_field).dtype)
+        )
     _ledger_reduce(self, self.layout.field_bytes(out_field))
     # The rebroadcast delivers n·ω to every context.
     self.ledger.add_msg_direct(
@@ -384,6 +454,19 @@ def allreduce(self, store: ContextStore, field: str, out_field: str,
         self.cfg.block_bytes,
     )
     return store
+
+
+def _tiered_reduce(self, store, field: str, op: str) -> _np.ndarray:
+    """Reduce a backing-tier field.  The reduction itself runs on device
+    (same jnp op, same accumulation order) so the result is bit-identical to
+    the device tier even for float32 fields; the field matrix [v, n] is
+    assumed to fit the device budget (reduce operands are collective-sized,
+    not data-sized)."""
+    vals = store.field(field)
+    red = _np.asarray(_reduce_op(op)(jax.device_put(vals)))
+    self.ledger.add_tier_in(vals.nbytes, disk=False)
+    self.ledger.add_tier_out(red.nbytes, disk=False)
+    return red
 
 
 def _reduce_op(op: str):

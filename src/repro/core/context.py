@@ -17,7 +17,6 @@ float32/int32/uint32 payloads (the BSP applications' element types).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -205,6 +204,30 @@ class ContextLayout:
     @property
     def live_bytes(self) -> int:
         return self.live_words * WORD
+
+    def live_word_index(self) -> Optional[np.ndarray]:
+        """Sorted word offsets of every *live* (field-allocated) word, or
+        ``None`` when the whole context is live — the common bump-layout
+        case, where callers can skip the gather/scatter entirely.
+
+        This is what lets the backing-tier swap engine move only allocated
+        bytes (PEMS2 §6.6): a layout with freed holes swaps ``live_words``
+        words per context, not ``words``.
+        """
+        if self.live_words == self.words:
+            return None
+        return field_word_index(self, self.names)
+
+
+def field_word_index(layout_: ContextLayout,
+                     names: Sequence[str]) -> np.ndarray:
+    """Union of the named fields' word ranges, sorted — the monotone
+    gather/scatter index for sliced and live-word swaps."""
+    ranges = [
+        np.arange(layout_.offset(n), layout_.offset(n) + layout_.field_words(n))
+        for n in names
+    ]
+    return np.unique(np.concatenate(ranges)) if ranges else np.arange(0)
 
 
 def layout(fields: Iterable[Tuple[str, Sequence[int], object]],

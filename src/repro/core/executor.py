@@ -18,11 +18,24 @@ Drivers (§5):
 
 All drivers produce bit-identical results; they differ in bytes moved (the
 ledger) and in schedule (wall-clock benchmarks).
+
+Backing tiers (``repro.core.backing``): with ``tier="host"`` or
+``tier="memmap"`` the full ``[v, words]`` population lives off-device (host
+RAM or an ``np.memmap`` file) and the round loop becomes a *host-driven*
+pipeline: each round's ``k`` contexts — live allocator bytes only (§6.6) —
+are ``jax.device_put`` onto the device, computed, and written back.  Under
+the ``async`` driver a prefetch thread issues round ``r+1``'s swap-in while
+round ``r`` computes, so the disk/PCIe transfer genuinely overlaps compute
+(the STXXL-file driver, §5.1) rather than merely reordering on-device
+copies.  The ledger records the measured per-tier traffic alongside the
+modeled counters, and ``Pems.tier_stats`` the wall-clock overlap.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -31,8 +44,15 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .context import Ctx, ContextLayout, ContextStore, WORD, init_store
-from .iostats import IOLedger
+from .backing import TIERS, TieredStore, make_backing
+from .context import (
+    Ctx,
+    ContextLayout,
+    ContextStore,
+    field_word_index,
+    init_store,
+)
+from .iostats import IOLedger, TierStats
 
 DRIVERS = ("explicit", "sliced", "async")
 
@@ -58,14 +78,24 @@ class PemsConfig:
     driver: str = "explicit"
     alpha: Optional[int] = None  # Alltoallv network chunk (messages at once)
     vp_axis: str = "vp"
+    tier: str = "device"        # backing tier: device | host | memmap
+    backing_path: Optional[str] = None   # memmap tier: backing file location
+    device_cap_bytes: Optional[int] = None  # device-memory budget for contexts
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
             raise ValueError(f"unknown driver {self.driver!r}")
+        if self.tier not in TIERS:
+            raise ValueError(f"unknown tier {self.tier!r} (choose from {TIERS})")
         if self.v % self.P:
             raise ValueError("v must be divisible by P")
         if (self.v // self.P) % self.k:
             raise ValueError("v/P must be divisible by k")
+        if self.tier != "device" and self.P > 1:
+            raise ValueError(
+                "backing tiers currently require P == 1 (the P > 1 mesh path "
+                "is device-resident; see ROADMAP open items)"
+            )
 
     @property
     def v_local(self) -> int:
@@ -86,17 +116,42 @@ class Pems:
         self.layout = layout
         self.mesh = mesh
         self.ledger = IOLedger()
+        self.tier_stats = TierStats()
         if cfg.P > 1 and mesh is None:
             raise ValueError("P > 1 requires a mesh with the vp axis")
         if mesh is not None and mesh.shape[cfg.vp_axis] != cfg.P:
             raise ValueError(
                 f"mesh axis {cfg.vp_axis}={mesh.shape[cfg.vp_axis]} != P={cfg.P}"
             )
+        if cfg.device_cap_bytes is not None:
+            # Device-memory budget for contexts: the device tier must fit the
+            # whole population; a backing tier needs its in-flight round
+            # blocks — input + output, plus the prefetched next block under
+            # the double-buffered async driver.
+            if cfg.tier == "device":
+                need, what = cfg.v * layout.mu_bytes, "v·mu"
+            else:
+                bufs = 3 if cfg.driver == "async" else 2
+                need = bufs * cfg.k * layout.mu_bytes
+                what = f"{bufs}·k·mu in-flight round blocks"
+            if need > cfg.device_cap_bytes:
+                raise ValueError(
+                    f"device-resident contexts need {need:,} bytes ({what}) "
+                    f"but device_cap_bytes={cfg.device_cap_bytes:,}; "
+                    "lower k or use tier='host'/'memmap'"
+                )
         # PEMS2 disk requirement: exactly vμ/P per real processor (§6.3).
         self.ledger.require_disk(cfg.v * layout.mu_bytes // cfg.P)
 
     # ------------------------------------------------------------------ setup
-    def init(self, init_fn=None) -> ContextStore:
+    def init(self, init_fn=None, tier: Optional[str] = None,
+             backing_path: Optional[str] = None):
+        """Create the context population.  ``tier`` (default: the config's)
+        selects device residency or a host/disk backing store."""
+        tier = self.cfg.tier if tier is None else tier
+        if tier != "device":
+            return self._init_tiered(init_fn, tier,
+                                     backing_path or self.cfg.backing_path)
         store = init_store(self.layout, self.cfg.v, init_fn)
         if self.mesh is not None:
             spec = P(self.cfg.vp_axis, None)
@@ -104,6 +159,26 @@ class Pems:
                 self.layout,
                 jax.device_put(store.data, NamedSharding(self.mesh, spec)),
             )
+        return store
+
+    def _init_tiered(self, init_fn, tier: str,
+                     backing_path: Optional[str]) -> TieredStore:
+        cfg, lo = self.cfg, self.layout
+        backing = make_backing(tier, cfg.v, lo.words, backing_path)
+        store = TieredStore(lo, backing, self.ledger)
+        if init_fn is not None:
+            # Populate k contexts at a time so the device never holds more
+            # than the resident partitions, even during init.
+            def one(rho):
+                ctx = Ctx(lo, jnp.zeros((lo.words,), jnp.uint32))
+                for name, val in init_fn(rho).items():
+                    ctx = ctx.set(name, val)
+                return ctx.words
+
+            chunk = jax.jit(jax.vmap(one))
+            for r0 in range(0, cfg.v, cfg.k):
+                rhos = jnp.arange(r0, r0 + cfg.k, dtype=jnp.int32)
+                backing.arr[r0:r0 + cfg.k] = np.asarray(chunk(rhos))
         return store
 
     def store_spec(self) -> P:
@@ -131,6 +206,9 @@ class Pems:
 
         self._ledger_superstep(sliced, reads, writes)
 
+        if isinstance(store, TieredStore):
+            return self._superstep_tiered(store, fn, reads, writes, sliced)
+
         if sliced:
             body = self._round_body_sliced(fn, list(reads), list(writes))
         else:
@@ -152,6 +230,111 @@ class Pems:
                 out_specs=P(cfg.vp_axis, None),
             )(store.data)
         return ContextStore(lo, data)
+
+    # ------------------------------------------------- tiered (host-driven)
+    def _superstep_tiered(self, store: TieredStore, fn, reads, writes,
+                          sliced: bool) -> TieredStore:
+        """Host-driven round pipeline over a host/memmap backing store.
+
+        Per round: swap in the round's ``k`` contexts (live/declared words
+        only), run the jitted round body on device, swap the results out.
+        The ``async`` driver prefetches round ``r+1`` on a worker thread
+        while round ``r`` computes (double buffering, §5.1).
+        """
+        lo = self.layout
+        if sliced:
+            in_idx = field_word_index(lo, reads)
+            out_idx = field_word_index(lo, writes)
+        else:
+            # Full-context swap, but live allocator bytes only (§6.6).
+            in_idx = out_idx = lo.live_word_index()
+        body = self._tiered_body(fn, in_idx, out_idx)
+        self._run_tiered(store, body, in_idx, out_idx)
+        return store
+
+    def _tiered_body(self, fn, in_idx, out_idx):
+        lo, k = self.layout, self.cfg.k
+        # The index maps are runtime arguments, not trace constants: embedded
+        # million-word iota comparisons otherwise send XLA constant folding
+        # off a cliff (seconds per superstep compile).
+        in_j = None if in_idx is None else jnp.asarray(in_idx, jnp.int32)
+        out_j = None if out_idx is None else jnp.asarray(out_idx, jnp.int32)
+
+        @jax.jit
+        def body(rho0, rw, in_i, out_i):   # rw: [k, n_in] uint32
+            rhos = rho0 + jnp.arange(k, dtype=jnp.int32)
+
+            def one(rho, r):
+                if in_i is None:
+                    w = r
+                else:
+                    # Same zero-fill convention as the sliced device driver:
+                    # undeclared (or dead) words are simply not resident.
+                    w = jnp.zeros((lo.words,), jnp.uint32).at[in_i].set(
+                        r, indices_are_sorted=True, unique_indices=True
+                    )
+                out = fn(rho, Ctx(lo, w)).words
+                if out_i is None:
+                    return out
+                return out.take(out_i)
+
+            return jax.vmap(one)(rhos, rw)
+
+        return lambda rho0, rw: body(rho0, rw, in_j, out_j)
+
+    def _run_tiered(self, store: TieredStore, body, in_idx, out_idx) -> None:
+        cfg, stats, led = self.cfg, self.tier_stats, self.ledger
+        arr = store.backing.arr
+        disk = store.tier == "memmap"
+        k = cfg.k
+        rounds = cfg.v // k
+
+        def fetch(r):
+            t0 = time.perf_counter()
+            rows = arr[r * k:(r + 1) * k]
+            h = np.ascontiguousarray(
+                rows if in_idx is None else rows[:, in_idx]
+            )
+            d = jax.device_put(h)
+            d.block_until_ready()
+            led.add_tier_in(h.nbytes, disk)
+            stats.swap_in_s += time.perf_counter() - t0
+            return d
+
+        use_async = cfg.driver == "async" and rounds > 1
+        pool = ThreadPoolExecutor(max_workers=1) if use_async else None
+        try:
+            nxt = pool.submit(fetch, 0) if use_async else None
+            for r in range(rounds):
+                if use_async:
+                    t0 = time.perf_counter()
+                    blk = nxt.result()
+                    stats.stall_s += time.perf_counter() - t0
+                    if r + 1 < rounds:
+                        # Safe to overlap with round r's writeback: rounds
+                        # touch disjoint context rows.
+                        nxt = pool.submit(fetch, r + 1)
+                else:
+                    t0 = time.perf_counter()
+                    blk = fetch(r)
+                    stats.stall_s += time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                out = body(jnp.int32(r * k), blk)   # async dispatch
+                out_h = np.asarray(out)             # blocks on compute
+                stats.compute_s += time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                if out_idx is None:
+                    arr[r * k:(r + 1) * k] = out_h
+                else:
+                    arr[r * k:(r + 1) * k, out_idx] = out_h
+                led.add_tier_out(out_h.nbytes, disk)
+                stats.swap_out_s += time.perf_counter() - t0
+                stats.rounds += 1
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
 
     # ----------------------------------------------------------- round bodies
     def _run_rounds(self, local_data, body, dev):
@@ -210,16 +393,8 @@ class Pems:
         # monotone sweep over the context.  A superstep that declares many
         # fields (PSRS declares up to 3 reads + 3 writes) then costs one
         # take + one scatter per round instead of O(fields) slice ops.
-        def index_map(names: List[str]) -> jnp.ndarray:
-            ranges = [
-                np.arange(lo.offset(n), lo.offset(n) + lo.field_words(n))
-                for n in names
-            ]
-            idx = np.unique(np.concatenate(ranges)) if ranges else np.arange(0)
-            return jnp.asarray(idx, jnp.int32)
-
-        read_idx = index_map(reads)
-        write_idx = index_map(writes)
+        read_idx = jnp.asarray(field_word_index(lo, reads), jnp.int32)
+        write_idx = jnp.asarray(field_word_index(lo, writes), jnp.int32)
 
         def body(rho0, blk):
             rhos = rho0 + jnp.arange(self.cfg.k, dtype=jnp.int32)

@@ -18,6 +18,15 @@ Byte categories mirror the thesis' cost terms:
 * ``network``                     — bytes crossing the real-processor network
                                     (the ``g`` coefficient)
 * ``disk_space``                  — peak external-memory footprint (§6.3)
+
+With a host/disk backing tier (``repro.core.backing``) the swaps are no longer
+simulated: the executor's host-driven pipeline records the *measured* traffic
+in a second group of counters (``h2d_bytes``/``d2h_bytes`` for PCIe-direction
+transfers, ``disk_read_bytes``/``disk_write_bytes`` for the memmap file).
+These are real bytes, not modeled blocks, and are deliberately excluded from
+``io_total`` so the thesis' closed-form lemmas keep validating unchanged.
+:class:`TierStats` carries the wall-clock side of the same pipeline (swap
+time, stall time, the async driver's compute/I-O overlap fraction — §5.1).
 """
 
 from __future__ import annotations
@@ -39,6 +48,13 @@ class IOLedger:
     disk_space: int = 0
     num_ios: int = 0          # block-granular I/O operations
     supersteps: int = 0       # internal superstep barriers (the ``L`` term)
+
+    # Measured backing-tier traffic (host-driven pipeline; real bytes moved,
+    # recorded at execution time — excluded from the modeled ``io_total``).
+    h2d_bytes: int = 0        # host → device transfers (swap-in)
+    d2h_bytes: int = 0        # device → host transfers (swap-out)
+    disk_read_bytes: int = 0  # bytes read from the memmap backing file
+    disk_write_bytes: int = 0  # bytes written to the memmap backing file
 
     # ------------------------------------------------------------------ totals
     @property
@@ -78,6 +94,31 @@ class IOLedger:
     def add_network(self, nbytes: int) -> None:
         self.network += nbytes
 
+    def add_tier_in(self, nbytes: int, disk: bool) -> None:
+        """Measured swap-in: host (or disk) → device."""
+        self.h2d_bytes += nbytes
+        if disk:
+            self.disk_read_bytes += nbytes
+
+    def add_tier_out(self, nbytes: int, disk: bool) -> None:
+        """Measured swap-out: device → host (or disk)."""
+        self.d2h_bytes += nbytes
+        if disk:
+            self.disk_write_bytes += nbytes
+
+    def add_disk_read(self, nbytes: int) -> None:
+        """Measured disk-resident data movement that never crosses to the
+        device (host-side collectives over a memmap store)."""
+        self.disk_read_bytes += nbytes
+
+    def add_disk_write(self, nbytes: int) -> None:
+        self.disk_write_bytes += nbytes
+
+    @property
+    def tier_total(self) -> int:
+        """Total measured backing-tier traffic (both directions)."""
+        return self.h2d_bytes + self.d2h_bytes
+
     def add_barrier(self, n: int = 1) -> None:
         self.supersteps += n
 
@@ -90,6 +131,7 @@ class IOLedger:
             "swap_total": self.swap_total,
             "message_total": self.message_total,
             "io_total": self.io_total,
+            "tier_total": self.tier_total,
         }
 
     def merge(self, other: "IOLedger") -> "IOLedger":
@@ -109,3 +151,39 @@ def _blocks(nbytes: int, block: int) -> int:
     if nbytes <= 0:
         return 0
     return -(-nbytes // block)
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Wall-clock instrumentation of the host-driven swap pipeline.
+
+    ``swap_in_s`` is the time the (pre)fetcher spent reading the backing
+    store and uploading to the device; ``stall_s`` is the main-thread time
+    actually *blocked* waiting for a swap-in.  Under the synchronous drivers
+    the two are equal; under the ``async`` driver the prefetch thread runs
+    while the previous round computes, so ``stall_s < swap_in_s`` — the gap
+    is the PEMS2 §5.1 compute/I-O overlap.
+    """
+
+    rounds: int = 0
+    swap_in_s: float = 0.0
+    swap_out_s: float = 0.0
+    compute_s: float = 0.0    # round compute incl. the blocking D2H readback
+    stall_s: float = 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of swap-in time hidden behind compute (0 when nothing
+        overlapped, → 1 when swap-ins were entirely free)."""
+        if self.swap_in_s <= 0.0:
+            return 0.0
+        return min(1.0, max(0.0, 1.0 - self.stall_s / self.swap_in_s))
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(TierStats):
+            setattr(self, f.name, f.default)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self) | {
+            "overlap_fraction": self.overlap_fraction,
+        }

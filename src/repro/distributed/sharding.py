@@ -16,10 +16,9 @@ Strategy (GSPMD fills in the collectives):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -74,7 +73,6 @@ def _spec_for_param(rules: ShardingRules, path: str,
         return base + i
 
     leaf = path.split("/")[-1]
-    group = path.split("/")[-2] if "/" in path else ""
 
     rank = len(shape) - base             # logical (unstacked) rank
 

@@ -14,7 +14,6 @@ dimension sequentially, so the scratch carry is well-defined).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, ARCH_NAMES, applicable_shapes, get_config, skip_reason
+from repro.configs import SHAPES, ARCH_NAMES, get_config, skip_reason
 from repro.data import DataConfig, make_batch_specs
 from repro.distributed.sharding import (
     ShardingRules, batch_specs_sharded, cache_pspec, opt_pspecs, param_pspecs,
@@ -34,7 +34,7 @@ from repro.launch.mesh import data_axes_of, make_production_mesh
 from repro.models import Model
 from repro.optim import OptConfig, adamw_init
 from repro.roofline import HW, collective_bytes, roofline_terms
-from repro.train import TrainConfig, TrainState, init_train_state, make_train_step
+from repro.train import TrainConfig, TrainState, make_train_step
 
 # Per-arch execution choices (documented in EXPERIMENTS.md §Dry-run).
 BIG_MOE = ("kimi-k2-1t-a32b", "arctic-480b")

@@ -16,9 +16,8 @@ API (all pure functions of params):
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import ContextLayout, Pems, PemsConfig
 
 
-def _build(v: int, k: int, n_v: int, driver: str):
+def _build(v: int, k: int, n_v: int, driver: str, tier: str = "device",
+           backing_path=None, device_cap_bytes=None):
     lo = (
         ContextLayout()
         .add("x", (n_v,), jnp.int32)
@@ -24,7 +25,9 @@ def _build(v: int, k: int, n_v: int, driver: str):
         .add("offs", (v,), jnp.int32)
         .add("res", (n_v,), jnp.int32)
     )
-    pems = Pems(PemsConfig(v=v, k=k, driver=driver), lo)
+    pems = Pems(PemsConfig(v=v, k=k, driver=driver, tier=tier,
+                           backing_path=backing_path,
+                           device_cap_bytes=device_cap_bytes), lo)
 
     def local_total(rho, ctx):
         return ctx.set("tot", ctx.get("x").sum()[None])
@@ -51,18 +54,26 @@ def _build(v: int, k: int, n_v: int, driver: str):
                                reads=["x", "offs"], writes=["res"])
         return store.field("res")
 
-    return pems, jax.jit(program)
+    if tier == "device":
+        program = jax.jit(program)
+    return pems, program
 
 
 def prefix_sum(x, v: int, k: int = 1, driver: str = "explicit",
-               return_pems: bool = False):
+               return_pems: bool = False, tier: str = "device",
+               backing_path=None, device_cap_bytes=None):
     """Inclusive prefix sum of int32 ``x`` ([n], n divisible by v) on PEMS."""
     x = jnp.asarray(x, jnp.int32)
     n = x.shape[0]
     if n % v:
         raise ValueError(f"n={n} must be divisible by v={v}")
-    pems, program = _build(v, k, n // v, driver)
-    res = np.asarray(program(x.reshape(v, n // v))).reshape(-1)
+    pems, program = _build(v, k, n // v, driver, tier=tier,
+                           backing_path=backing_path,
+                           device_cap_bytes=device_cap_bytes)
+    data = x.reshape(v, n // v)
+    if tier != "device":
+        data = np.asarray(data)
+    res = np.asarray(program(data)).reshape(-1)
     if return_pems:
         return res, pems
     return res

@@ -27,8 +27,13 @@ from repro.core import ContextLayout, Pems, PemsConfig
 from .common import INT_MAX, group_by_dest
 
 
-def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
-           mode: str, local_sort, use_kernel: bool = True):
+def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
+           mode: str, local_sort, use_kernel: bool = True,
+           tier: str = "device", backing_path=None, device_cap_bytes=None):
+    # One home for the PSRS capacity defaults: the always-safe per-message
+    # bound n/v and the 2n/v per-receiver guarantee.
+    cap = n_v if cap is None else cap
+    rcap = 2 * n_v if rcap is None else rcap
     lo = (
         ContextLayout()
         .add("data", (n_v,), jnp.int32)
@@ -43,7 +48,9 @@ def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
         .add("rcount", (1,), jnp.int32)
         .add("oflow", (1,), jnp.int32)
     )
-    pems = Pems(PemsConfig(v=v, k=k, driver=driver), lo)
+    pems = Pems(PemsConfig(v=v, k=k, driver=driver, tier=tier,
+                           backing_path=backing_path,
+                           device_cap_bytes=device_cap_bytes), lo)
 
     def sort_and_sample(rho, ctx):
         data = local_sort(ctx.get("data"))
@@ -97,26 +104,74 @@ def _build(v: int, k: int, n_v: int, cap: int, rcap: int, driver: str,
             .set("oflow", ctx.get("oflow") | over[None])
         )
 
-    def program(data_blocks):               # [v, n_v] int32
-        store = pems.init().with_field("data", data_blocks)
-        store = pems.superstep(store, sort_and_sample,
-                               reads=["data"], writes=["data", "samp"])
-        store = pems.gather(store, "samp", "allsamp", root=0)
-        store = pems.superstep(store, pick_splitters,
-                               reads=["allsamp"], writes=["gsplit"])
-        store = pems.bcast(store, "gsplit", root=0)
-        store = pems.superstep(store, partition,
-                               reads=["data", "gsplit"],
-                               writes=["bsend", "bscnt", "oflow"])
-        store = pems.alltoallv(store, "bsend", "brecv", "bscnt", "brcnt",
-                               mode=mode, fill=INT_MAX, use_kernel=use_kernel)
-        store = pems.superstep(store, merge,
-                               reads=["brecv", "brcnt", "oflow"],
-                               writes=["result", "rcount", "oflow"])
+    # The program as an explicit stage list: the device tier jit-fuses the
+    # whole pipeline as before, while backing tiers run it stage-by-stage
+    # host-side — and callers (checkpoint tests, resumable jobs) can stop
+    # after any stage and resume from a restored store.
+    steps = [
+        ("sort_sample", lambda st: pems.superstep(
+            st, sort_and_sample, reads=["data"], writes=["data", "samp"])),
+        ("gather_samples", lambda st: pems.gather(
+            st, "samp", "allsamp", root=0)),
+        ("pick_splitters", lambda st: pems.superstep(
+            st, pick_splitters, reads=["allsamp"], writes=["gsplit"])),
+        ("bcast_splitters", lambda st: pems.bcast(st, "gsplit", root=0)),
+        ("partition", lambda st: pems.superstep(
+            st, partition, reads=["data", "gsplit"],
+            writes=["bsend", "bscnt", "oflow"])),
+        ("alltoallv", lambda st: pems.alltoallv(
+            st, "bsend", "brecv", "bscnt", "brcnt",
+            mode=mode, fill=INT_MAX, use_kernel=use_kernel)),
+        ("merge", lambda st: pems.superstep(
+            st, merge, reads=["brecv", "brcnt", "oflow"],
+            writes=["result", "rcount", "oflow"])),
+    ]
+
+    def load(data_blocks):                  # [v, n_v] int32
+        return pems.init().with_field("data", data_blocks)
+
+    def extract(store):
         return (store.field("result"), store.field("rcount"),
                 store.field("oflow"))
 
-    return pems, jax.jit(program)
+    def program(data_blocks):
+        store = load(data_blocks)
+        for _, step in steps:
+            store = step(store)
+        return extract(store)
+
+    if tier == "device":
+        program = jax.jit(program)
+    return pems, program, (load, steps, extract)
+
+
+def psrs_plan(
+    v: int,
+    n_v: int,
+    k: int = 1,
+    driver: str = "explicit",
+    mode: str = "direct",
+    cap: Optional[int] = None,
+    rcap: Optional[int] = None,
+    local_sort=jnp.sort,
+    use_kernel: bool = True,
+    tier: str = "device",
+    backing_path=None,
+    device_cap_bytes=None,
+):
+    """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
+
+    ``load([v, n_v] int32) -> store`` initialises the population;
+    ``steps`` is a list of named ``store -> store`` stages (run them in
+    order, or stop after any stage, checkpoint the backing store, and
+    resume later); ``extract(store) -> (result, rcount, oflow)``.
+    """
+    pems, _, (load, steps, extract) = _build(
+        v, k, n_v, cap, rcap, driver, mode, local_sort,
+        use_kernel=use_kernel, tier=tier, backing_path=backing_path,
+        device_cap_bytes=device_cap_bytes,
+    )
+    return pems, load, steps, extract
 
 
 def psrs_sort(
@@ -130,6 +185,9 @@ def psrs_sort(
     local_sort=jnp.sort,
     return_pems: bool = False,
     use_kernel: bool = True,
+    tier: str = "device",
+    backing_path=None,
+    device_cap_bytes=None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
@@ -139,18 +197,26 @@ def psrs_sort(
     (defaults to the PSRS guarantee 2n/v).  ``use_kernel`` toggles the fused
     Pallas delivery path in the final Alltoallv (results are bit-identical
     either way; kept for equivalence testing).
+
+    ``tier`` selects where the context population lives: ``"device"`` (the
+    seed in-memory path, whole program jitted), ``"host"`` (host RAM) or
+    ``"memmap"`` (a disk backing file at ``backing_path``) — the out-of-core
+    paths, host-driven with only k·μ device-resident at a time, optionally
+    enforced via ``device_cap_bytes``.  All tiers sort bit-identically.
     """
     keys = jnp.asarray(keys, jnp.int32)
     n = keys.shape[0]
     if n % v:
         raise ValueError(f"n={n} must be divisible by v={v}")
     n_v = n // v
-    cap = n_v if cap is None else cap
-    rcap = 2 * n_v if rcap is None else rcap
-
-    pems, program = _build(v, k, n_v, cap, rcap, driver, mode, local_sort,
-                           use_kernel=use_kernel)
-    result, rcount, oflow = program(keys.reshape(v, n_v))
+    pems, program, _ = _build(v, k, n_v, cap, rcap, driver, mode, local_sort,
+                              use_kernel=use_kernel, tier=tier,
+                              backing_path=backing_path,
+                              device_cap_bytes=device_cap_bytes)
+    data = keys.reshape(v, n_v)
+    if tier != "device":
+        data = np.asarray(data)
+    result, rcount, oflow = program(data)
     result = np.asarray(result)
     rcount = np.asarray(rcount)[:, 0]
     if np.asarray(oflow).any():

@@ -15,9 +15,8 @@ ring/tree realisation moves ~2× the payload: reduce-scatter + all-gather).
 
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict
 
 # TPU v5e hardware constants (per the assignment).
 HW = {

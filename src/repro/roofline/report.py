@@ -10,7 +10,6 @@ import json
 import os
 import sys
 
-from .analyze import HW
 
 
 def load(art_dir: str):

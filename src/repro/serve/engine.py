@@ -3,7 +3,7 @@ steps and donated caches (buffer reuse across decode steps)."""
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

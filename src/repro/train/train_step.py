@@ -102,7 +102,6 @@ def make_train_step(model, tcfg: TrainConfig, microbatch_sharding=None):
                 round_fn, (jnp.zeros(()), zero), mbs)
             loss = loss_sum / nmb
             grads = jax.tree.map(lambda g: g / nmb, grads)
-            metrics = {}
 
         ef = state.ef
         if tcfg.grad_compress:

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
-from repro.core import Ctx, ContextLayout, Pems, PemsConfig
+from repro.core import ContextLayout, Pems, PemsConfig
 
 
 def make_layout(v, omega, n=16):

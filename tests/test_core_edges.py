@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Ctx, ContextLayout, Pems, PemsConfig
+from repro.core import ContextLayout, Pems, PemsConfig
 
 
 def test_config_validation():

@@ -10,7 +10,7 @@ import textwrap
 
 import pytest
 
-from repro.roofline import HW, collective_bytes, roofline_terms
+from repro.roofline import collective_bytes, roofline_terms
 
 
 def test_collective_bytes_parser():

@@ -7,7 +7,6 @@ Lemma 7.2.1 (Bcast), Lemma 7.4.2 (Reduce), Thm 2.2.3/§6.3 disk space, and the
 Fig 6.2 disk-space table."""
 
 import jax.numpy as jnp
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import ContextLayout, Pems, PemsConfig, analysis

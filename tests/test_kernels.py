@@ -1,7 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps in interpret mode against the
 pure-jnp oracles, plus hypothesis property tests."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

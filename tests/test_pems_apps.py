@@ -188,7 +188,6 @@ def _dfs_tour_oracle(parent):
 
 def _random_forest(rng, n, n_trees=1):
     parent = np.zeros(n, np.int64)
-    roots = list(range(n_trees))
     for i in range(n_trees):
         parent[i] = i
     for i in range(n_trees, n):

@@ -1,7 +1,6 @@
 """Unit tests for the roofline report/table generation and the analytic
 memory floor (no compiles needed)."""
 
-import numpy as np
 
 from repro.roofline.analyze import analytic_bytes_floor
 from repro.roofline.report import dryrun_table, roofline_table

@@ -2,8 +2,6 @@
 gradient compression, checkpoint fault tolerance, data determinism, sharding
 rules, and a small end-to-end training run with loss decrease."""
 
-import dataclasses
-import json
 import os
 
 import jax
