@@ -47,11 +47,20 @@ def main() -> int:
                   f"baseline={base.get(key)!r} new={new.get(key)!r}")
             return 0
 
-    base_cfgs = {(c["v"], c["n_words"]): c for c in base["configs"]}
-    new_cfgs = {(c["v"], c["n_words"]): c for c in new["configs"]}
+    # P defaults to 1 so pre-mesh baselines keep matching.
+    base_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c
+                 for c in base["configs"]}
+    new_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c
+                for c in new["configs"]}
     matched = sorted(set(base_cfgs) & set(new_cfgs))
     if not matched:
         print("FAIL: no matched configs between baseline and new run")
+        return 1
+    missing = sorted(set(base_cfgs) - set(new_cfgs))
+    if missing:
+        # A sweep that silently dropped configs (e.g. the P=2 subprocess
+        # degrading to an empty list) must not read as a green gate.
+        print(f"FAIL: baseline configs missing from the new run: {missing}")
         return 1
 
     failures = []
@@ -59,7 +68,7 @@ def main() -> int:
         b, n = base_cfgs[key], new_cfgs[key]
         floor = b["speedup_vs_dense"] / args.threshold
         status = "ok" if n["speedup_vs_dense"] >= floor else "REGRESSED"
-        print(f"v={key[0]} n_words={key[1]:>8}: paired speedup "
+        print(f"v={key[0]} P={key[1]} n_words={key[2]:>8}: paired speedup "
               f"baseline={b['speedup_vs_dense']:.3f} "
               f"new={n['speedup_vs_dense']:.3f} floor={floor:.3f} [{status}]")
         if status != "ok":

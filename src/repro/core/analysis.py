@@ -151,6 +151,22 @@ def pems2_alltoallv_par_comm_time(
     return m.g * alpha * k * omega / m.b + m.l * v * v / (P * k * alpha)
 
 
+def pems2_alltoallv_par_network_rounds(v: int, P: int, k: int,
+                                       alpha) -> int:
+    """Bulk all-to-all launches of the network phase.  Unchunked
+    (``alpha=None``): a single launch.  α-chunked (Alg 7.1.3): the m = v/P
+    local contexts proceed in source rounds of k, each shipping its
+    destinations in ⌈m/α⌉ α-chunks — one launch per (round, chunk), moving
+    ≤ α·k·ω words per (source, destination) process pair (Lemma 7.1.9's
+    buffer bound).  Lemma 7.1.7's ``l`` term counts v²/(Pkα) = P· the
+    chunked count in *point-to-point* rounds; a bulk all-to-all serves all
+    P destinations at once."""
+    if alpha is None:
+        return 1
+    m = v // P
+    return (m // k) * -(-m // alpha)
+
+
 def pems2_disk_space(v: int, P: int, mu: int) -> int:
     """§6.3: PEMS2 needs exactly vμ/P per real processor (no indirect area)."""
     return v * mu // P

@@ -10,7 +10,8 @@ Two Alltoallv implementations are provided:
 
 * ``mode="direct"``   — PEMS2 (Alg 7.1.1/7.1.2): messages move straight from
   source contexts to destination contexts; with ``P > 1`` the network phase is
-  α-chunked (Alg 7.1.3) so the shared communication buffer stays ≤ α·k·ω.
+  α-chunked (Alg 7.1.3) so the communication buffer stays ≤ α·k·ω per
+  destination process.
 * ``mode="indirect"`` — PEMS1 baseline (Alg 2.2.1): messages are staged
   through a separate "indirect area" (an extra ``[v, v, ω]`` buffer behind an
   optimization barrier so XLA cannot fuse the copy away), costing the extra
@@ -34,6 +35,18 @@ re-mask downstream.  ``use_kernel=False`` keeps the seed's dense-transpose
 path; both are bit-identical (and ≈1.6–2.8× apart in wall time on CPU at
 v=16, ω ≥ 256 — see ``benchmarks/bench_alltoallv.py``).
 
+With ``P > 1`` the same word-level route runs per mesh process
+(``_alltoallv_fused_mesh``): the send field's raw word range crosses the
+network directly and the (src_proc, dst_proc)-tiled kernel delivers it
+into the destination rows, boundary mask and counts transpose fused — the
+dense ``[m, v, ω]`` per-process transposed staging of ``_global_transpose``
+never materializes.  Unchunked (``alpha=None``) this is a single
+``lax.all_to_all`` feeding one concat row rebuild; with ``alpha`` set the
+network phase is α-chunked (Alg 7.1.3) into one ``[k, P, α, ω]`` buffer per
+(source round, destination chunk) — ≤ α·k·ω words per process pair, the
+Lemma 7.1.9 bound — delivered in place chunk by chunk.  ``use_kernel=False``
+keeps the dense route for equivalence testing.
+
 The I/O ledger is updated with *event-level* counts that tests validate
 against the closed forms in :mod:`repro.core.analysis`; the delivery
 implementation (kernel vs dense, masked vs not) never changes the event
@@ -52,7 +65,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from .backing import TieredStore
-from .context import ContextStore, WORD, _from_words
+from .context import ContextStore, WORD, _from_words, _to_words
 
 
 # --------------------------------------------------------------------------- #
@@ -89,14 +102,24 @@ def alltoallv(
         raise ValueError(f"alltoallv fields must be [v, ω]; got {f.shape}")
     if fill is not None and (send_counts is None or recv_counts is None):
         raise ValueError("fill requires send_counts/recv_counts")
+    if fill is not None:
+        # One early representability check for every implementation path:
+        # an out-of-range fill would otherwise wrap silently (or fail deep
+        # inside a trace with an opaque cast error).
+        from repro.kernels.alltoallv_deliver import check_fill_range
+        check_fill_range(fill, f.dtype)
     omega_b = int(_np.prod(f.shape[1:], dtype=_np.int64)) * WORD if len(f.shape) > 1 else WORD
 
     if isinstance(store, TieredStore):
         store = _alltoallv_host(self, store, send, recv,
                                 send_counts, recv_counts, fill)
-    elif mode == "direct" and cfg.P == 1 and use_kernel:
-        store = _alltoallv_fused(self, store, send, recv,
-                                 send_counts, recv_counts, fill)
+    elif mode == "direct" and use_kernel:
+        if cfg.P == 1:
+            store = _alltoallv_fused(self, store, send, recv,
+                                     send_counts, recv_counts, fill)
+        else:
+            store = _alltoallv_fused_mesh(self, store, send, recv,
+                                          send_counts, recv_counts, fill)
     else:
         store = _alltoallv_dense(self, store, send, recv,
                                  send_counts, recv_counts, mode, fill)
@@ -105,12 +128,26 @@ def alltoallv(
     return store
 
 
+def _fill_word(fill, dtype) -> _np.uint32:
+    """The word-level masking convention, in one place: the bit pattern of
+    ``fill`` in the payload field's dtype, as a store word — what every
+    raw-word delivery path (P == 1 fused, mesh, tiered host) writes into
+    masked lanes so the receiver reads the typed value."""
+    return _np.asarray(fill, _np.dtype(dtype)).view(_np.uint32)
+
+
 # CPU-fallback implementation switch: below this per-message word count the
 # whole store is cache-resident and a row-at-a-time fori_loop delivery (one
 # strided gather + one in-place row write per destination, ~2 payload copies
 # of traffic) beats the vectorised transpose+concat (~4 copies); above it the
 # loop's strided gathers thrash and the single fused transpose wins.
 _ROW_LOOP_MAX_WW = 768
+
+# Mesh-path landing switch: up to this many per-process payload words the
+# received buffer is cache-resident and a dynamic-update-slice write wins;
+# above it the concat row rebuild (which fuses the lane split into its
+# output loop) is consistently faster on CPU.
+_MESH_DUS_MAX_WORDS = 1 << 17
 
 
 def _alltoallv_fused(self, store, send, recv, send_counts, recv_counts, fill):
@@ -135,10 +172,7 @@ def _alltoallv_fused(self, store, send, recv, send_counts, recv_counts, fill):
 
     fill_word = None
     if fill is not None:
-        # The kernel moves raw words; mask with the bit pattern of ``fill``
-        # in the send field's dtype so the receiver sees the typed value.
-        fill_word = int(_np.asarray(fill, _np.dtype(lo.field(send).dtype))
-                        .view(_np.uint32))
+        fill_word = int(_fill_word(fill, lo.field(send).dtype))
 
     # The row loop writes destination rows while later iterations still read
     # source rows, so it must not run when send and recv alias the same
@@ -187,6 +221,138 @@ def _deliver_rows_inplace(store, send, recv, counts_i32, fill_word):
     return ContextStore(store.layout, lax.fori_loop(0, v, body, store.data))
 
 
+def _alltoallv_fused_mesh(self, store, send, recv, send_counts, recv_counts,
+                          fill):
+    """PEMS2 word-level direct delivery over the ``P > 1`` mesh: assemble →
+    ship → land, Alg 7.1.3's structure at the word level.
+
+    Each chunk is *assembled* straight from the send field's raw word range
+    by the (src_proc, dst_proc)-tiled kernel — destination-ordered staging
+    with the receiver's boundary mask applied at the source and the counts
+    transpose fused into the same pass — then *shipped* through
+    ``lax.all_to_all`` (payload and transposed counts as two aligned
+    buffers of the same collective round), and the received buffer *lands*
+    in the destination rows verbatim: no receive-side transpose exists, and
+    the dense ``[m, v, ω]`` per-process staging of ``_global_transpose``
+    never materializes.
+
+    Default (``alpha=None``, unchunked): a single all_to_all feeding one
+    concat-based row rebuild (whose output loop XLA fuses the lane split
+    into — the ``with_field_words`` trick).  With ``alpha`` set the network
+    phase is α-chunked: one ``[k, P, α, ω]`` buffer per (source round of k
+    (§6.5), destination α-chunk) — ≤ α·k·ω payload words per (source,
+    destination) process pair, the Lemma 7.1.9 bound — landed in place
+    chunk by chunk.  Bounded buffers cost extra collective launches; the
+    knob exists for memory-bounded staging (and the tiered ``P > 1`` path
+    to come), not for speed.
+    """
+    from repro.kernels.alltoallv_deliver import assemble_proc_fused
+
+    from .executor import _shard_map
+    shard_map = _shard_map()
+
+    cfg = self.cfg
+    lo = store.layout
+    v, Pn, m, k = cfg.v, cfg.P, cfg.v_local, cfg.k
+    alpha = cfg.alpha
+    ww = lo.field_words(send) // v             # ω in store words
+    off_s, off_r = lo.offset(send), lo.offset(recv)
+    has_counts = send_counts is not None and recv_counts is not None
+    if has_counts:
+        off_c, off_rc = lo.offset(send_counts), lo.offset(recv_counts)
+        cs = lo.field(send_counts).dtype
+        cr = lo.field(recv_counts).dtype
+
+    fill_word = None
+    if fill is not None:
+        fill_word = int(_fill_word(fill, lo.field(send).dtype))
+
+    def conv_ct(ct):
+        if cs == cr:
+            return ct
+        return _to_words(_from_words(ct, cs).astype(cr))
+
+    def ship(xc, cm, cp):
+        """Assemble one chunk [s, P, d, ww] into destination order (mask +
+        counts transpose fused), all_to_all payload and counts, returning
+        payload [d, P, s, ww] and counts words [d, P, s] (or None) — both
+        already in the destination rows' slot order."""
+        out, ct = assemble_proc_fused(xc, cm, cp, fill=fill_word)
+        y = lax.all_to_all(out, cfg.vp_axis, split_axis=0,
+                           concat_axis=1, tiled=False)  # [d, P(src), s, ww]
+        if ct is None:
+            return y, None
+        yc = lax.all_to_all(ct, cfg.vp_axis, split_axis=0,
+                            concat_axis=1, tiled=False)  # [d, P(src), s]
+        return y, yc
+
+    def f(local):                              # [m, words]: this proc's rows
+        # Word-level send matrix: W[sl, dp, dl] is row sl's ω-words for
+        # global destination dp·m + dl (sliced once; functional, so the
+        # recv writes below cannot corrupt it even when send == recv).
+        W = lax.slice(local, (0, off_s), (m, off_s + v * ww))
+        W = W.reshape(m, Pn, m, ww)
+        C_w = C_i = None
+        if has_counts:
+            C_w = lax.slice(local, (0, off_c), (m, off_c + v))
+            C_w = C_w.reshape(m, Pn, m)
+            if fill is not None:
+                C_i = _from_words(C_w, cs).astype(jnp.int32)
+
+        if alpha is None:
+            # Unchunked: one assembly, one all_to_all, one row landing.
+            pay, ct = ship(W, C_i, C_w)        # [m, P, m, ww], [m, P, m]
+            if m * v * ww <= _MESH_DUS_MAX_WORDS:
+                new = lax.dynamic_update_slice(
+                    local, pay.reshape(m, v * ww), (0, off_r))
+            else:
+                left = lax.slice(local, (0, 0), (m, off_r))
+                right = lax.slice(
+                    local, (0, off_r + v * ww), (m, local.shape[1]))
+                new = jnp.concatenate(
+                    [left, pay.reshape(m, v * ww), right], axis=1)
+            if has_counts:
+                # After the landing: `new` has a single consumer, so XLA
+                # updates it in place (before it, the update would copy the
+                # whole row block — `local` is still pinned by the slices).
+                new = lax.dynamic_update_slice(
+                    new, conv_ct(ct.reshape(m, v)), (0, off_rc))
+            return new
+
+        for s0 in range(0, m, k):              # source rounds of k (§6.5)
+            for c0 in range(0, m, alpha):      # destination α-chunks
+                c1 = min(c0 + alpha, m)
+                xc = W[s0:s0 + k, :, c0:c1, :]          # [k, P, c, ww]
+                cm = cp = None
+                if has_counts:
+                    cp = C_w[s0:s0 + k, :, c0:c1]
+                    if fill is not None:
+                        cm = C_i[s0:s0 + k, :, c0:c1]
+                pay, ct = ship(xc, cm, cp)     # [c, P, k, ww], [c, P, k]
+                if has_counts:
+                    ct = conv_ct(ct)
+                # Land in place: each source process' slots are a
+                # contiguous word range of the destination rows.
+                for q in range(Pn):
+                    local = lax.dynamic_update_slice(
+                        local, pay[:, q].reshape(c1 - c0, k * ww),
+                        (c0, off_r + (q * m + s0) * ww),
+                    )
+                    if has_counts:
+                        local = lax.dynamic_update_slice(
+                            local, ct[:, q], (c0, off_rc + q * m + s0),
+                        )
+        return local
+
+    data = shard_map(
+        f,
+        mesh=self.mesh,
+        in_specs=(P(cfg.vp_axis, None),),
+        out_specs=P(cfg.vp_axis, None),
+    )(store.data)
+    return ContextStore(lo, data)
+
+
 def _alltoallv_dense(self, store, send, recv, send_counts, recv_counts,
                      mode, fill):
     """Dense-transpose data path: the PEMS1 indirect baseline, the α-chunked
@@ -227,19 +393,87 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
     host/memmap store — messages move straight between context rows of the
     backing array, the closest real-world analogue of the thesis writing
     each message directly into the destination context on disk.  Bit-
-    identical to the device paths (copies only, no arithmetic)."""
-    v = self.cfg.v
+    identical to the device paths (copies only, no arithmetic).
+
+    The staging is chunked *by destination* (the α knob, Alg 7.1.3 applied
+    host-side): each chunk stages ``[αd, v, ω]`` — every source's messages
+    for αd destination contexts — masks it in place, and writes it straight
+    into those destinations' recv word ranges.  ``device_cap_bytes`` (the
+    memory budget the backing tier exists to honour) bounds the staging
+    buffer: αd is clamped so the chunk fits, instead of materializing the
+    dense ``[v, v, ω]`` matrix the tier cannot afford.  An in-place shuffle
+    (``send == recv``) additionally snapshots the whole field — a chunked
+    in-place transpose would read rows it has already overwritten — and
+    raises when snapshot + chunk cannot fit the cap."""
+    cfg = self.cfg
+    v = cfg.v
     lo = store.layout
-    S = store.field(send).reshape(v, v, -1)        # host copy of send field
-    Rt = _np.swapaxes(S, 0, 1)                     # (dst, src, ω)
+    arr = store.backing.arr
+    disk = store.tier == "memmap"
+    ww = lo.field_words(send) // v                 # ω in store words
+    off_s, off_r = lo.offset(send), lo.offset(recv)
+
     Ct = None
     if send_counts is not None and recv_counts is not None:
-        Ct = store.field(send_counts).reshape(v, v).T
+        Ct = store.field(send_counts).reshape(v, v).T.copy()
+    fill_word = None
     if fill is not None:
-        lane = _np.arange(Rt.shape[2])[None, None, :]
-        Rt = _np.where(lane < Ct[:, :, None].astype(_np.int32),
-                       Rt, _np.asarray(fill, Rt.dtype))
-    store.with_field(recv, Rt.reshape((v,) + lo.field(recv).shape))
+        fill_word = _fill_word(fill, lo.field(send).dtype)
+
+    alpha = v if cfg.alpha is None else cfg.alpha
+    if cfg.device_cap_bytes is not None:
+        per_dst = v * ww * WORD                    # one destination column
+        if per_dst > cfg.device_cap_bytes:
+            raise ValueError(
+                f"alltoallv staging needs {per_dst:,} bytes per destination "
+                f"([v, ω] = [{v}, {ww * WORD}B]) but device_cap_bytes="
+                f"{cfg.device_cap_bytes:,}; raise the cap or shrink ω"
+            )
+        alpha = min(alpha, cfg.device_cap_bytes // per_dst)
+    full = None
+    if send == recv:
+        # In-place shuffle: later chunks would read rows already
+        # overwritten, so the whole field is snapshotted once and the
+        # (still α-chunked) loop reads from the snapshot.  The snapshot
+        # itself is v·v·ω staging — refuse when the cap cannot cover
+        # snapshot + chunk rather than silently blowing the budget.
+        full_bytes = v * v * ww * WORD
+        if (cfg.device_cap_bytes is not None
+                and full_bytes + alpha * v * ww * WORD
+                > cfg.device_cap_bytes):
+            raise ValueError(
+                f"in-place tiered alltoallv (send == recv) must snapshot "
+                f"the whole field ({full_bytes:,} B) on top of the "
+                f"{alpha * v * ww * WORD:,} B chunk, exceeding "
+                f"device_cap_bytes={cfg.device_cap_bytes:,}; use distinct "
+                "send/recv fields or raise the cap"
+            )
+        full = _np.ascontiguousarray(arr[:, off_s:off_s + v * ww])
+        if disk:
+            self.ledger.add_disk_read(full.nbytes)
+
+    stats = self.tier_stats
+    for c0 in range(0, v, alpha):
+        c1 = min(c0 + alpha, v)
+        if full is not None:
+            cols = full[:, c0 * ww:c1 * ww]
+        else:
+            cols = arr[:, off_s + c0 * ww:off_s + c1 * ww]
+        blk = _np.empty((c1 - c0, v, ww), _np.uint32)   # the staging buffer
+        blk[...] = _np.swapaxes(cols.reshape(v, c1 - c0, ww), 0, 1)
+        if disk and full is None:
+            self.ledger.add_disk_read(blk.nbytes)
+        stats.peak_stage_bytes = max(
+            stats.peak_stage_bytes,
+            blk.nbytes + (full.nbytes if full is not None else 0),
+        )
+        if fill is not None:
+            lane = _np.arange(ww)[None, None, :]
+            _np.copyto(blk, fill_word,
+                       where=lane >= Ct[c0:c1, :, None].astype(_np.int64))
+        arr[c0:c1, off_r:off_r + v * ww] = blk.reshape(c1 - c0, v * ww)
+        if disk:
+            self.ledger.add_disk_write(blk.nbytes)
     if Ct is not None:
         store.with_field(recv_counts, Ct.astype(lo.field(recv_counts).dtype))
     return store
@@ -257,7 +491,7 @@ def _global_transpose(self, M: jnp.ndarray) -> jnp.ndarray:
 
     m = cfg.v_local
     Pn = cfg.P
-    alpha = cfg.alpha or m
+    alpha = m if cfg.alpha is None else cfg.alpha
     w = M.shape[-1]
 
     def f(local):                              # [m(src_local), v, w]
@@ -300,6 +534,13 @@ def _ledger_alltoallv(self, omega_b: int, mode: str) -> None:
         if Pn > 1:
             led.add_network(v * (v - m) * omega_b)
             led.add_msg_direct(v * (v - m) * omega_b, B)
+            # Network launches: one bulk all-to-all when unchunked, else one
+            # per (source round of k, destination α-chunk) — Alg 7.1.3,
+            # validated against analysis.pems2_alltoallv_par_network_rounds.
+            if cfg.alpha is None:
+                led.add_network_rounds(1)
+            else:
+                led.add_network_rounds((m // k) * -(-m // cfg.alpha))
         led.add_boundary(2 * v * v * B, B)
         led.add_barrier(3)
     else:
@@ -393,10 +634,18 @@ def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
     """Every VP receives every VP's ``send`` into ``recv`` ([v, ω])."""
     cfg = self.cfg
     if isinstance(store, TieredStore):
+        # Stage only the gathered [v, ω] row (every receiver gets the same
+        # bytes) and write it per destination row — never the dense
+        # [v, v·ω] broadcast the tier cannot afford.
         A = store.field(send)                  # host copy [v, ...]
-        out = _np.broadcast_to(A[None], (cfg.v,) + A.shape).astype(
-            _np.dtype(store.layout.field(recv).dtype))
-        store.with_field(recv, out)
+        w = _np.ascontiguousarray(
+            A.astype(_np.dtype(store.layout.field(recv).dtype))).reshape(-1)
+        off = store.layout.offset(recv)
+        store.backing.arr[:, off:off + w.size] = w.view(_np.uint32)[None, :]
+        if store.tier == "memmap":
+            self.ledger.add_disk_write(cfg.v * w.nbytes)
+        self.tier_stats.peak_stage_bytes = max(
+            self.tier_stats.peak_stage_bytes, w.nbytes)
     else:
         A = store.field(send)                  # [v, ...]
         out = jnp.broadcast_to(

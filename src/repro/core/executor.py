@@ -91,6 +91,24 @@ class PemsConfig:
             raise ValueError("v must be divisible by P")
         if (self.v // self.P) % self.k:
             raise ValueError("v/P must be divisible by k")
+        if self.alpha is not None:
+            # The Alltoallv network chunk (Alg 7.1.3).  alpha=0 used to fall
+            # through as "unchunked" (`alpha or m`), and out-of-range values
+            # passed straight into the chunk loop; validate here so every
+            # consumer (mesh network phase, tiered staging, ledger rounds)
+            # sees a sane value.
+            if self.alpha != int(self.alpha):
+                raise ValueError(
+                    f"alpha={self.alpha!r} must be an integer chunk size"
+                )
+            self.alpha = int(self.alpha)
+            if not 1 <= self.alpha <= self.v_local:
+                raise ValueError(
+                    f"alpha={self.alpha} out of range: the Alltoallv "
+                    f"network chunk must satisfy 1 <= alpha <= v/P = "
+                    f"{self.v_local} (alpha=None means unchunked, one "
+                    "chunk of v/P destinations)"
+                )
         if self.tier != "device" and self.P > 1:
             raise ValueError(
                 "backing tiers currently require P == 1 (the P > 1 mesh path "

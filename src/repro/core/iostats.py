@@ -45,6 +45,9 @@ class IOLedger:
     msg_indirect: int = 0
     boundary: int = 0
     network: int = 0
+    network_rounds: int = 0   # bulk all-to-all launches of the α-chunked
+                              # network phase (Alg 7.1.3; the ``l`` term of
+                              # Lemma 7.1.7 counts P· this, point-to-point)
     disk_space: int = 0
     num_ios: int = 0          # block-granular I/O operations
     supersteps: int = 0       # internal superstep barriers (the ``L`` term)
@@ -93,6 +96,9 @@ class IOLedger:
 
     def add_network(self, nbytes: int) -> None:
         self.network += nbytes
+
+    def add_network_rounds(self, n: int) -> None:
+        self.network_rounds += n
 
     def add_tier_in(self, nbytes: int, disk: bool) -> None:
         """Measured swap-in: host (or disk) → device."""
@@ -170,6 +176,9 @@ class TierStats:
     swap_out_s: float = 0.0
     compute_s: float = 0.0    # round compute incl. the blocking D2H readback
     stall_s: float = 0.0
+    peak_stage_bytes: int = 0  # largest host staging buffer a tiered
+                               # collective allocated (≤ device_cap_bytes
+                               # when the cap is set — see _alltoallv_host)
 
     @property
     def overlap_fraction(self) -> float:

@@ -1,4 +1,18 @@
-from .alltoallv_deliver import deliver_tiles
-from .ops import deliver, deliver_fused, uses_pallas
+from .alltoallv_deliver import assemble_proc_tiles, deliver_tiles
+from .ops import (
+    assemble_proc_fused,
+    check_fill_range,
+    deliver,
+    deliver_fused,
+    uses_pallas,
+)
 
-__all__ = ["deliver", "deliver_fused", "deliver_tiles", "uses_pallas"]
+__all__ = [
+    "assemble_proc_fused",
+    "assemble_proc_tiles",
+    "check_fill_range",
+    "deliver",
+    "deliver_fused",
+    "deliver_tiles",
+    "uses_pallas",
+]

@@ -12,8 +12,16 @@ cycle.
 
 Grid: ``(dst, src, ω/ωt)`` — one grid step moves one 128-lane ω-tile of one
 message, so arbitrarily large messages stream through VMEM in block-sized
-pieces instead of requiring the full ω payload resident at once.  Two
-optional fusions ride along:
+pieces instead of requiring the full ω payload resident at once.  For the
+``P > 1`` mesh path the grid grows a real-processor axis
+(:func:`assemble_proc_tiles`): each α-chunk is staged into the
+communication buffer with a ``(dst_proc, dst_local, src_local, ω/ωt)`` grid
+whose output index map writes source j's tile at the slot ``all_to_all``
+ships straight to the destination process' context row — the same
+offset-table permutation, now spanning the ``(src_proc, dst_proc)`` tiling
+of Alg 7.1.3, applied at the sender so the received buffer lands in the
+destination rows verbatim.  Two optional fusions ride along (both
+variants):
 
 * ``fill`` — the boundary mask.  When given, lanes past ``counts[s, d]`` are
   overwritten with ``fill`` while the tile is in VMEM (the receiver then
@@ -115,6 +123,110 @@ def deliver_tiles(
     out = pl.pallas_call(
         kernel,
         grid=(v, v, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    if with_counts:
+        return out[0], out[1]
+    return out[0], None
+
+
+
+def _assemble_proc_kernel(*refs, omega_tile: int, fill, masked: bool,
+                          with_counts: bool):
+    """One grid step of the mesh variant: stage one ω-tile of the message
+    (src_local j → dst_proc p, dst_local d) into the communication buffer,
+    boundary-masked at the source."""
+    refs = list(refs)
+    cnt_ref = refs.pop(0) if masked else None
+    cp_ref = refs.pop(0) if with_counts else None
+    msg_ref = refs.pop(0)
+    out_ref = refs.pop(0)
+    ct_ref = refs.pop(0) if with_counts else None
+
+    data = msg_ref[0, 0, 0, :]
+    if masked:
+        t = pl.program_id(3)
+        cnt = cnt_ref[0, 0, 0]
+        lane = t * omega_tile + jax.lax.broadcasted_iota(
+            jnp.int32, (omega_tile,), 0
+        )
+        data = jnp.where(lane < cnt, data, jnp.asarray(fill, data.dtype))
+    out_ref[0, 0, 0, :] = data
+    if with_counts:
+        # Revisited with the same value by every ω-tile step (idempotent).
+        ct_ref[0, 0, 0] = cp_ref[0, 0, 0]
+
+
+def assemble_proc_tiles(
+    msgs: jnp.ndarray,                       # [s, P, d, ω]  (src_local, dst_proc, dst_local, payload)
+    counts: Optional[jnp.ndarray] = None,    # [s, P, d] int32 valid lengths
+    counts_payload: Optional[jnp.ndarray] = None,  # [s, P, d] raw counts words
+    *,
+    fill=None,
+    omega_tile: int = LANE_TILE,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """The ``(src_proc, dst_proc)``-tiled grid of the ``P > 1`` mesh path:
+    assemble one real processor's α-chunk into the communication buffer in
+    destination order, so the subsequent ``all_to_all`` lands each piece
+    directly in its destination rows (the sender-side message staging of
+    Alg 7.1.3 — the mesh analogue of writing each message straight into the
+    destination context).
+
+    ``msgs`` holds the chunk's source-context rows: axis 0 the local source
+    contexts, axis 1 the destination real processor, axis 2 its destination
+    contexts covered by the chunk.  Returns ``(out, ct)`` with
+    ``out[p, d, j] = msgs[j, p, d]`` (lanes ≥ ``counts[j, p, d]`` replaced
+    by ``fill`` when given — the boundary fix-up applied while the tile is
+    staged) and ``ct[p, d, j] = counts_payload[j, p, d]`` (``None`` when no
+    payload given): the transposed counts ride along to the same receiver.
+    """
+    s, Pn, d, omega = msgs.shape
+    masked = fill is not None
+    if masked and counts is None:
+        raise ValueError("fill requires counts")
+    with_counts = counts_payload is not None
+
+    wt = min(omega_tile, omega)
+    nt = -(-omega // wt)                     # ceil: last tile may be ragged
+    kernel = functools.partial(
+        _assemble_proc_kernel, omega_tile=wt, fill=fill, masked=masked,
+        with_counts=with_counts,
+    )
+
+    in_specs, args = [], []
+    if masked:
+        in_specs.append(pl.BlockSpec((1, 1, 1), lambda p, d, j, t: (j, p, d)))
+        args.append(counts)
+    if with_counts:
+        in_specs.append(pl.BlockSpec((1, 1, 1), lambda p, d, j, t: (j, p, d)))
+        args.append(counts_payload)
+    in_specs.append(
+        pl.BlockSpec((1, 1, 1, wt), lambda p, d, j, t: (j, p, d, t))
+    )
+    args.append(msgs)
+
+    # The (p, d) output tiling is the offset table T spanning the process
+    # grid: source j's tile for destination (p, d) lands at the slot the
+    # all_to_all ships straight to process p's context row d.
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, wt), lambda p, d, j, t: (p, d, j, t))
+    ]
+    out_shape = [jax.ShapeDtypeStruct((Pn, d, s, omega), msgs.dtype)]
+    if with_counts:
+        out_specs.append(
+            pl.BlockSpec((1, 1, 1), lambda p, d, j, t: (p, d, j))
+        )
+        out_shape.append(
+            jax.ShapeDtypeStruct((Pn, d, s), counts_payload.dtype)
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(Pn, d, s, nt),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,

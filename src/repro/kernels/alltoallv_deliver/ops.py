@@ -20,12 +20,55 @@ asserted end-to-end (``psrs_sort(..., use_kernel=...)``).
 
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .alltoallv_deliver import deliver_tiles
+from .alltoallv_deliver import assemble_proc_tiles, deliver_tiles
+
+
+def check_fill_range(fill, dtype) -> None:
+    """Reject a ``fill`` value the payload dtype cannot represent.
+
+    The kernels bake ``fill`` into the trace with ``jnp.asarray(fill,
+    msgs.dtype)``, which wraps silently for out-of-range integers — a
+    ``fill=INT_MAX`` boundary sentinel on an ``int8``/``uint16`` payload
+    would arrive as ``-1``/``65535`` and corrupt every masked lane.  Checked
+    here, once, for every delivery path (kernel, vectorised fallback, and
+    the collective layer's word-level fill patterns)."""
+    dt = jnp.dtype(dtype)
+    if not isinstance(fill, (int, float, np.integer, np.floating)):
+        return                                 # traced/abstract: can't check
+    if jnp.issubdtype(dt, jnp.integer):
+        info = jnp.iinfo(dt)
+        if isinstance(fill, (float, np.floating)) and not float(fill).is_integer():
+            raise ValueError(
+                f"fill={fill!r} is not representable in integer payload "
+                f"dtype {dt.name}"
+            )
+        if not info.min <= int(fill) <= info.max:
+            raise ValueError(
+                f"fill={fill!r} out of range for payload dtype {dt.name} "
+                f"[{info.min}, {info.max}]: the cast would wrap silently"
+            )
+    elif jnp.issubdtype(dt, jnp.floating):
+        try:
+            f = float(fill)
+        except OverflowError:
+            # An integer too large even for float64 certainly overflows the
+            # payload dtype; keep the advertised exception type.
+            raise ValueError(
+                f"fill={fill!r} overflows payload dtype {dt.name}"
+            ) from None
+        if math.isfinite(f) and abs(f) > float(jnp.finfo(dt).max):
+            raise ValueError(
+                f"fill={fill!r} overflows payload dtype {dt.name} "
+                f"(max {float(jnp.finfo(dt).max):g}): the cast would "
+                "produce inf"
+            )
 
 
 def uses_pallas(interpret: Optional[bool] = None) -> bool:
@@ -60,6 +103,7 @@ def deliver(msgs: jnp.ndarray, counts: jnp.ndarray, *, fill=0,
     """PEMS2 direct delivery of ``msgs [v, v, ω]`` with valid lengths
     ``counts [v, v]`` → ``[v(dst), v(src), ω]``, lanes past the count set to
     ``fill``."""
+    check_fill_range(fill, msgs.dtype)
     out, _ = _dispatch(
         msgs, counts.astype(jnp.int32), None, fill=fill, interpret=interpret,
         use_kernel=use_kernel,
@@ -81,9 +125,46 @@ def deliver_fused(
     second output of the same kernel call.  Returns ``(out, ct)``."""
     if fill is not None and counts is None:
         raise ValueError("fill requires counts")
+    if fill is not None:
+        check_fill_range(fill, msgs.dtype)
     return _dispatch(
         msgs,
         None if fill is None else counts.astype(jnp.int32),
         counts_payload,
         fill=fill, interpret=interpret, use_kernel=use_kernel,
+    )
+
+
+def assemble_proc_fused(
+    msgs: jnp.ndarray,                        # [s, P, d, ω] pre-all_to_all chunk
+    counts: Optional[jnp.ndarray] = None,     # [s, P, d] int32 mask lengths
+    counts_payload: Optional[jnp.ndarray] = None,  # [s, P, d] raw counts words
+    *,
+    fill=None,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Mesh-path staging with the same fusions as :func:`deliver_fused`,
+    over the ``(src_proc, dst_proc)``-tiled grid: the α-chunk ``[s, P, d,
+    ω]`` is assembled into destination order as ``out[p, d, j] = msgs[j, p,
+    d]`` (boundary mask applied at the source; transposed counts payload as
+    the fused second output) so the subsequent ``all_to_all`` lands every
+    piece directly in its destination rows.  Same backend dispatch as the
+    ``P == 1`` route: compiled Pallas on TPU, the vectorised reference on
+    CPU/GPU, interpret mode for tests."""
+    if fill is not None and counts is None:
+        raise ValueError("fill requires counts")
+    if fill is not None:
+        check_fill_range(fill, msgs.dtype)
+    if use_kernel and uses_pallas(interpret):
+        return assemble_proc_tiles(
+            msgs,
+            None if fill is None else counts.astype(jnp.int32),
+            counts_payload, fill=fill, interpret=bool(interpret),
+        )
+    from .ref import assemble_proc_ref
+    return assemble_proc_ref(
+        msgs,
+        None if fill is None else counts.astype(jnp.int32),
+        counts_payload, fill=fill,
     )

@@ -31,3 +31,25 @@ def deliver_fused_ref(
         out = deliver_ref(msgs, counts, fill=fill)
     ct = None if counts_payload is None else jnp.swapaxes(counts_payload, 0, 1)
     return out, ct
+
+
+def assemble_proc_ref(
+    msgs: jnp.ndarray,                       # [s, P, d, ω]
+    counts: Optional[jnp.ndarray] = None,    # [s, P, d]
+    counts_payload: Optional[jnp.ndarray] = None,  # [s, P, d]
+    *,
+    fill=None,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Oracle for :func:`..alltoallv_deliver.assemble_proc_tiles`: stage the
+    chunk into destination order — ``out[p, d, j] = msgs[j, p, d]`` — with
+    the optional source-side boundary mask and transposed counts payload."""
+    out = jnp.moveaxis(msgs, 0, 2)           # [P, d, s, ω]
+    if fill is not None:
+        cm = jnp.moveaxis(counts, 0, 2)      # [P, d, s]
+        lane = jnp.arange(msgs.shape[-1])[None, None, None, :]
+        out = jnp.where(lane < cm[..., None], out,
+                        jnp.asarray(fill, msgs.dtype))
+    ct = None
+    if counts_payload is not None:
+        ct = jnp.moveaxis(counts_payload, 0, 2)
+    return out, ct

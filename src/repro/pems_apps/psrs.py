@@ -29,7 +29,8 @@ from .common import INT_MAX, group_by_dest
 
 def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
            mode: str, local_sort, use_kernel: bool = True,
-           tier: str = "device", backing_path=None, device_cap_bytes=None):
+           tier: str = "device", backing_path=None, device_cap_bytes=None,
+           P: int = 1, mesh=None, alpha=None):
     # One home for the PSRS capacity defaults: the always-safe per-message
     # bound n/v and the 2n/v per-receiver guarantee.
     cap = n_v if cap is None else cap
@@ -48,9 +49,9 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         .add("rcount", (1,), jnp.int32)
         .add("oflow", (1,), jnp.int32)
     )
-    pems = Pems(PemsConfig(v=v, k=k, driver=driver, tier=tier,
-                           backing_path=backing_path,
-                           device_cap_bytes=device_cap_bytes), lo)
+    pems = Pems(PemsConfig(v=v, k=k, P=P, driver=driver, tier=tier,
+                           backing_path=backing_path, alpha=alpha,
+                           device_cap_bytes=device_cap_bytes), lo, mesh=mesh)
 
     def sort_and_sample(rho, ctx):
         data = local_sort(ctx.get("data"))
@@ -140,7 +141,10 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
             store = step(store)
         return extract(store)
 
-    if tier == "device":
+    # The P > 1 mesh path runs the stages eagerly (each superstep/collective
+    # shard_maps and jits internally); the single-process device tier still
+    # jit-fuses the whole pipeline as the seed did.
+    if tier == "device" and P == 1:
         program = jax.jit(program)
     return pems, program, (load, steps, extract)
 
@@ -158,6 +162,9 @@ def psrs_plan(
     tier: str = "device",
     backing_path=None,
     device_cap_bytes=None,
+    P: int = 1,
+    mesh=None,
+    alpha=None,
 ):
     """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
 
@@ -169,7 +176,7 @@ def psrs_plan(
     pems, _, (load, steps, extract) = _build(
         v, k, n_v, cap, rcap, driver, mode, local_sort,
         use_kernel=use_kernel, tier=tier, backing_path=backing_path,
-        device_cap_bytes=device_cap_bytes,
+        device_cap_bytes=device_cap_bytes, P=P, mesh=mesh, alpha=alpha,
     )
     return pems, load, steps, extract
 
@@ -188,6 +195,9 @@ def psrs_sort(
     tier: str = "device",
     backing_path=None,
     device_cap_bytes=None,
+    P: int = 1,
+    mesh=None,
+    alpha=None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
@@ -203,6 +213,13 @@ def psrs_sort(
     ``"memmap"`` (a disk backing file at ``backing_path``) — the out-of-core
     paths, host-driven with only k·μ device-resident at a time, optionally
     enforced via ``device_cap_bytes``.  All tiers sort bit-identically.
+
+    ``P``/``mesh`` run the simulation over ``P`` real processors (a jax
+    mesh with the ``vp`` axis): each process owns ``v/P`` contexts and the
+    final Alltoallv's network phase is α-chunked over the mesh (``alpha``,
+    Alg 7.1.3) — through the fused (src_proc, dst_proc)-tiled delivery
+    kernel by default, bit-identical to the dense ``use_kernel=False``
+    route and to the ``P == 1`` reference.
     """
     keys = jnp.asarray(keys, jnp.int32)
     n = keys.shape[0]
@@ -212,7 +229,8 @@ def psrs_sort(
     pems, program, _ = _build(v, k, n_v, cap, rcap, driver, mode, local_sort,
                               use_kernel=use_kernel, tier=tier,
                               backing_path=backing_path,
-                              device_cap_bytes=device_cap_bytes)
+                              device_cap_bytes=device_cap_bytes,
+                              P=P, mesh=mesh, alpha=alpha)
     data = keys.reshape(v, n_v)
     if tier != "device":
         data = np.asarray(data)

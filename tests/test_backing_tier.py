@@ -1,8 +1,12 @@
-"""Out-of-core backing tier: driver × tier bit-identity, measured ledger
-bytes vs the backing file on disk, and checkpoint→restore of a memmap-backed
-store resuming PSRS mid-stream."""
+"""Out-of-core backing tier: driver × tier bit-identity (including the
+2-process mesh extension of the identity matrix), measured ledger bytes vs
+the backing file on disk, collective staging under the device cap, and
+checkpoint→restore of a memmap-backed store resuming PSRS mid-stream."""
 
 import os
+import subprocess
+import sys
+import textwrap
 
 import jax.numpy as jnp
 import numpy as np
@@ -91,6 +95,157 @@ def test_tiered_collectives_match_device():
         for name, arr in outs[tier].items():
             np.testing.assert_array_equal(arr, outs["device"][name],
                                           err_msg=f"{tier}:{name}")
+
+
+# --------------------------------------------------------------------------- #
+# 2-process mesh extension of the identity matrix (subprocess: fake devices)   #
+# --------------------------------------------------------------------------- #
+
+_P2_PSRS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, numpy as np
+    from repro.pems_apps import psrs_sort
+
+    # Same inputs as test_psrs_driver_tier_bit_identity, so the mesh runs
+    # are pinned to the exact bytes the P == 1 identity matrix produces.
+    rng = np.random.default_rng(11)
+    n, v, k = 2048, 8, 2
+    data = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+    ref = psrs_sort(data, v=v, k=k)          # P == 1 seed reference
+    np.testing.assert_array_equal(ref, np.sort(data))
+
+    mesh = jax.make_mesh((2,), ("vp",))
+    for driver in ("explicit", "sliced", "async"):
+        for use_kernel in (True, False):
+            out = psrs_sort(data, v=v, k=k, driver=driver, P=2, mesh=mesh,
+                            use_kernel=use_kernel)
+            np.testing.assert_array_equal(out, ref)
+    # α-chunked network phase: same bytes regardless of chunking.
+    out = psrs_sort(data, v=v, k=k, P=2, mesh=mesh, alpha=2)
+    np.testing.assert_array_equal(out, ref)
+    print("P2_PSRS_OK")
+""")
+
+
+def test_psrs_driver_mesh_bit_identity_subprocess():
+    """driver × use_kernel matrix on a 2-process CPU mesh: the fused
+    (src_proc, dst_proc)-tiled delivery route must reproduce the P == 1
+    seed reference bit for bit (and so must the dense route)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _P2_PSRS],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # Without an explicit platform, jax probes for TPUs via the
+             # cloud metadata URL and stalls for minutes off-cloud.
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert "P2_PSRS_OK" in r.stdout, r.stderr[-3000:]
+
+
+# --------------------------------------------------------------------------- #
+# Collective staging under the device cap                                      #
+# --------------------------------------------------------------------------- #
+
+def _collective_store(tier, alpha=None, cap=None, k=2, v=8, omega=16):
+    lo = (ContextLayout()
+          .add("send", (v, omega), jnp.int32)
+          .add("recv", (v, omega), jnp.int32)
+          .add("scnt", (v,), jnp.int32)
+          .add("rcnt", (v,), jnp.int32))
+    pems = Pems(PemsConfig(v=v, k=k, tier=tier, alpha=alpha,
+                           device_cap_bytes=cap), lo)
+    rng = np.random.default_rng(0)
+    st = (pems.init()
+          .with_field("send",
+                      rng.integers(0, 100, (v, v, omega)).astype(np.int32))
+          .with_field("scnt",
+                      rng.integers(0, omega + 1, (v, v)).astype(np.int32)))
+    return pems, st
+
+
+@pytest.mark.parametrize("tier", ("host", "memmap"))
+def test_tiered_alltoallv_staging_respects_cap(tier):
+    """Tiered Alltoallv staging is chunked by destination (the α knob):
+    with a device cap that cannot hold the dense [v, v, ω] matrix, the
+    per-chunk staging buffer stays within the cap and the result is still
+    bit-identical to the device tier."""
+    v, omega = 8, 16
+    col_bytes = v * omega * 4                  # one destination column
+    dense_bytes = v * col_bytes                # the [v, v, ω] matrix
+    pems_d, st_d = _collective_store("device")
+    st_d = pems_d.alltoallv(st_d, "send", "recv", "scnt", "rcnt", fill=-1)
+    want_r = np.asarray(st_d.field("recv"))
+    want_c = np.asarray(st_d.field("rcnt"))
+
+    cap = 5 * col_bytes                        # fits 5 of 8 columns
+    assert cap < dense_bytes
+    pems, st = _collective_store(tier, cap=cap, k=1)
+    st = pems.alltoallv(st, "send", "recv", "scnt", "rcnt", fill=-1)
+    np.testing.assert_array_equal(np.asarray(st.field("recv")), want_r)
+    np.testing.assert_array_equal(np.asarray(st.field("rcnt")), want_c)
+    assert 0 < pems.tier_stats.peak_stage_bytes <= cap
+
+    # The α knob chunks even without a cap; results stay bit-identical.
+    for alpha in (1, 3, 8):
+        pems, st = _collective_store(tier, alpha=alpha)
+        st = pems.alltoallv(st, "send", "recv", "scnt", "rcnt", fill=-1)
+        np.testing.assert_array_equal(np.asarray(st.field("recv")), want_r)
+        np.testing.assert_array_equal(np.asarray(st.field("rcnt")), want_c)
+        assert pems.tier_stats.peak_stage_bytes <= max(alpha, 1) * col_bytes
+
+
+def test_tiered_alltoallv_inplace_cap_refused():
+    """send == recv must snapshot the whole field; with a cap that cannot
+    hold snapshot + chunk the call refuses instead of silently blowing the
+    budget (and still works uncapped, bit-identical to the device tier)."""
+    v, omega = 8, 16
+    lo = ContextLayout().add("send", (v, omega), jnp.int32)
+    rng = np.random.default_rng(1)
+    M = rng.integers(0, 100, (v, v, omega)).astype(np.int32)
+
+    pems = Pems(PemsConfig(v=v, k=1, tier="host"), lo)
+    st = pems.init().with_field("send", M)
+    st = pems.alltoallv(st, "send", "send")
+    np.testing.assert_array_equal(np.asarray(st.field("send")),
+                                  np.swapaxes(M, 0, 1))
+
+    cap = 5 * v * omega * 4                    # < field (v·v·ω) + chunk
+    pems = Pems(PemsConfig(v=v, k=1, tier="host", device_cap_bytes=cap), lo)
+    st = pems.init().with_field("send", M)
+    with pytest.raises(ValueError, match="in-place"):
+        pems.alltoallv(st, "send", "send")
+
+
+def test_tiered_alltoallv_chunked_ledger_bytes():
+    """Destination-chunked staging moves exactly the same measured bytes as
+    the whole-field staging it replaced: the field once in each direction."""
+    v, omega = 8, 16
+    pems, st = _collective_store("memmap", alpha=2)
+    r0, w0 = pems.ledger.disk_read_bytes, pems.ledger.disk_write_bytes
+    st = pems.alltoallv(st, "send", "recv", "scnt", "rcnt", fill=-1)
+    field_b = v * v * omega * 4
+    counts_b = v * v * 4
+    assert pems.ledger.disk_read_bytes - r0 == field_b + counts_b
+    assert pems.ledger.disk_write_bytes - w0 == field_b + counts_b
+
+
+def test_tiered_allgather_stages_one_row():
+    """Tiered allgather stages only the gathered [v, ω] row, never the
+    [v, v·ω] broadcast."""
+    v = 8
+    lo = (ContextLayout()
+          .add("x", (4,), jnp.int32)
+          .add("gath", (v, 4), jnp.int32))
+    pems = Pems(PemsConfig(v=v, k=2, tier="host"), lo)
+    st = pems.init().with_field(
+        "x", (np.arange(v * 4).reshape(v, 4)).astype(np.int32))
+    st = pems.allgather(st, "x", "gath")
+    want = np.arange(v * 4).reshape(v, 4).astype(np.int32)
+    for r in range(v):
+        np.testing.assert_array_equal(np.asarray(st.field("gath"))[r], want)
+    assert pems.tier_stats.peak_stage_bytes == v * 4 * 4
 
 
 # --------------------------------------------------------------------------- #

@@ -336,31 +336,61 @@ _P_GT_1 = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import Pems, PemsConfig, ContextLayout
+    from repro.core import Pems, PemsConfig, ContextLayout, analysis
 
     v, k, P, omega = 16, 2, 4, 4
     mesh = jax.make_mesh((P,), ("vp",))
-    lo = (ContextLayout()
-          .add("send", (v, omega), jnp.int32)
-          .add("recv", (v, omega), jnp.int32))
 
+    def make_lo():
+        return (ContextLayout()
+                .add("send", (v, omega), jnp.int32)
+                .add("scnt", (v,), jnp.int32)
+                .add("recv", (v, omega), jnp.int32)
+                .add("rcnt", (v,), jnp.int32))
+
+    def step(rho, ctx):
+        msgs = (rho * 1000 + jnp.arange(v, dtype=jnp.int32))[:, None]
+        msgs = msgs * jnp.ones((1, omega), jnp.int32)
+        cnt = (rho + jnp.arange(v, dtype=jnp.int32)) % omega + 1
+        return ctx.set("send", msgs).set("scnt", cnt)
+
+    # Fused (src_proc, dst_proc)-tiled word-level route (use_kernel=True,
+    # the default) vs the dense _global_transpose reference: bit-identical
+    # payload, counts, and ledger for every network chunking.
     for alpha in (None, 1, 2):
-        pems = Pems(PemsConfig(v=v, k=k, P=P, alpha=alpha), lo, mesh=mesh)
-        store = pems.init()
-
-        def step(rho, ctx):
-            msgs = (rho * 1000 + jnp.arange(v, dtype=jnp.int32))[:, None]
-            return ctx.set("send", msgs * jnp.ones((1, omega), jnp.int32))
-
-        store = pems.superstep(store, step)
-        store = pems.alltoallv(store, "send", "recv")
+        outs = []
+        for use_kernel in (True, False):
+            pems = Pems(PemsConfig(v=v, k=k, P=P, alpha=alpha), make_lo(),
+                        mesh=mesh)
+            store = pems.superstep(pems.init(), step)
+            store = pems.alltoallv(store, "send", "recv", "scnt", "rcnt",
+                                   fill=-7, use_kernel=use_kernel)
+            outs.append((np.asarray(store.field("recv")),
+                         np.asarray(store.field("rcnt")),
+                         pems.ledger.io_total, pems.ledger.network_rounds))
+        np.testing.assert_array_equal(outs[0][0], outs[1][0])
+        np.testing.assert_array_equal(outs[0][1], outs[1][1])
+        assert outs[0][2] == outs[1][2]
         S = np.asarray(store.field("send"))
-        R = np.asarray(store.field("recv"))
-        np.testing.assert_array_equal(R, np.swapaxes(S, 0, 1))
+        C = np.asarray(store.field("scnt"))
+        lane = np.arange(omega)[None, None, :]
+        want = np.where(lane < C.T[:, :, None], np.swapaxes(S, 0, 1), -7)
+        np.testing.assert_array_equal(outs[0][0], want)
+        np.testing.assert_array_equal(outs[0][1], C.T)
+        assert outs[0][3] == analysis.pems2_alltoallv_par_network_rounds(
+            v, P, k, alpha)
 
-        store = pems.bcast(store, "recv", root=5)
-        R2 = np.asarray(store.field("recv"))
-        np.testing.assert_array_equal(R2, np.broadcast_to(R[5], R2.shape))
+    # Plain transpose (no counts) through the fused mesh route + bcast.
+    pems = Pems(PemsConfig(v=v, k=k, P=P), make_lo(), mesh=mesh)
+    store = pems.superstep(pems.init(), step)
+    store = pems.alltoallv(store, "send", "recv")
+    S = np.asarray(store.field("send"))
+    R = np.asarray(store.field("recv"))
+    np.testing.assert_array_equal(R, np.swapaxes(S, 0, 1))
+
+    store = pems.bcast(store, "recv", root=5)
+    R2 = np.asarray(store.field("recv"))
+    np.testing.assert_array_equal(R2, np.broadcast_to(R[5], R2.shape))
     print("MULTIPROC_OK")
 """)
 

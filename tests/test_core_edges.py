@@ -16,6 +16,24 @@ def test_config_validation():
         PemsConfig(v=8, driver="nvme")  # unknown driver
 
 
+def test_config_alpha_validation():
+    """The Alltoallv network chunk is validated at construction: alpha=0
+    used to mean "no chunking" silently (`alpha or m`), and negative or
+    > v/P values passed straight through to the chunk loop."""
+    for bad in (0, -1, -8, 9, 10**6):
+        with pytest.raises(ValueError, match="alpha"):
+            PemsConfig(v=8, alpha=bad)
+    with pytest.raises(ValueError, match="alpha"):
+        PemsConfig(v=16, P=4, alpha=5)       # alpha bound is v/P, not v
+    with pytest.raises(ValueError, match="integer"):
+        PemsConfig(v=8, alpha=2.5)
+    # Boundary values that must construct.
+    assert PemsConfig(v=8, alpha=1).alpha == 1
+    assert PemsConfig(v=8, alpha=8).alpha == 8
+    assert PemsConfig(v=16, P=4, alpha=4).alpha == 4
+    assert PemsConfig(v=8, alpha=None).alpha is None
+
+
 def test_p_gt_1_requires_mesh():
     lo = ContextLayout().add("x", (4,), jnp.int32)
     with pytest.raises(ValueError):

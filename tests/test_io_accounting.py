@@ -111,6 +111,36 @@ def test_parallel_ledger_matches_exact_model():
     assert pems.ledger.io_total == want
     # Network volume: each VP sends v − v/P remote messages.
     assert pems.ledger.network == v * (v - v // P) * omega * 4
+    # Unchunked network phase (alpha=None): a single bulk all-to-all.
+    assert pems.ledger.network_rounds == (
+        analysis.pems2_alltoallv_par_network_rounds(v, P, k, None)
+    ) == 1
+
+
+def test_parallel_network_rounds_alpha_sweep():
+    """The α-chunked network phase's all-to-all launch count (Alg 7.1.3)
+    matches the closed form for every chunking, and bytes/IO events are
+    α-independent."""
+    from repro.core import IOLedger
+    from repro.core.collectives import _ledger_alltoallv
+
+    v, P, k, omega = 16, 4, 2, 8
+    m = v // P
+    base = None
+    for alpha in (1, 2, 3, m):
+        pems = Pems.__new__(Pems)
+        pems.cfg = PemsConfig(v=v, k=k, P=P, alpha=alpha)
+        pems.layout = mk(v, omega)
+        pems.ledger = IOLedger()
+        _ledger_alltoallv(pems, omega * 4, "direct")
+        assert pems.ledger.network_rounds == (
+            analysis.pems2_alltoallv_par_network_rounds(v, P, k, alpha)
+        ) == (m // k) * -(-m // alpha)
+        events = (pems.ledger.io_total, pems.ledger.network,
+                  pems.ledger.num_ios, pems.ledger.supersteps)
+        if base is None:
+            base = events
+        assert events == base
 
 
 # --------------------------------------------------------------------------- #

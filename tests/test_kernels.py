@@ -155,6 +155,115 @@ def test_psrs_bit_identical_across_use_kernel():
     np.testing.assert_array_equal(on, np.sort(x))
 
 
+@pytest.mark.parametrize("s,Pn,d,omega", [
+    (2, 2, 4, 8), (1, 4, 2, 129), (2, 3, 3, 200), (4, 2, 4, 64),
+])
+@pytest.mark.parametrize("counts_kind", ["random", "zero", "full"])
+def test_assemble_proc_tiled_grid_equivalence(s, Pn, d, omega, counts_kind):
+    """The (src_proc, dst_proc)-tiled mesh grid vs its oracle: the α-chunk
+    [s, P, d, ω] is staged as out[p, dl, j] = msgs[j, p, dl], source-side
+    boundary mask and counts transpose fused — covering ragged ω-tiles and
+    degenerate counts."""
+    from repro.kernels.alltoallv_deliver import assemble_proc_tiles
+    from repro.kernels.alltoallv_deliver.ref import assemble_proc_ref
+
+    msgs = jnp.asarray(RNG.integers(-1000, 1000, (s, Pn, d, omega)), jnp.int32)
+    if counts_kind == "random":
+        cnts = jnp.asarray(RNG.integers(0, omega + 1, (s, Pn, d)), jnp.int32)
+    elif counts_kind == "zero":
+        cnts = jnp.zeros((s, Pn, d), jnp.int32)
+    else:
+        cnts = jnp.full((s, Pn, d), omega, jnp.int32)
+    cw = jnp.asarray(RNG.integers(0, 2**32, (s, Pn, d), dtype=np.uint32))
+
+    out, ct = assemble_proc_tiles(msgs, cnts, cw, fill=-3, interpret=True)
+    ro, rc = assemble_proc_ref(msgs, cnts, cw, fill=-3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ro))
+    np.testing.assert_array_equal(np.asarray(ct), np.asarray(rc))
+
+    # No fill → verbatim permuted staging; no payload → single output.
+    out2, ct2 = assemble_proc_tiles(msgs, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out2), np.moveaxis(np.asarray(msgs), 0, 2)
+    )
+    assert ct2 is None
+
+
+def test_assemble_proc_fused_auto_backend_matches_interpret():
+    from repro.kernels.alltoallv_deliver import (
+        assemble_proc_fused,
+        assemble_proc_tiles,
+    )
+
+    s, Pn, d, omega = 2, 2, 3, 133
+    msgs = jnp.asarray(RNG.integers(-1000, 1000, (s, Pn, d, omega)), jnp.int32)
+    cnts = jnp.asarray(RNG.integers(0, omega + 1, (s, Pn, d)), jnp.int32)
+    auto, _ = assemble_proc_fused(msgs, cnts, fill=7)
+    interp, _ = assemble_proc_tiles(msgs, cnts, fill=7, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(interp))
+
+
+@pytest.mark.parametrize("dtype,bad_fill", [
+    (jnp.int8, np.iinfo(np.int32).max),      # would wrap to -1
+    (jnp.uint16, np.iinfo(np.int32).max),    # would wrap to 65535
+    (jnp.uint16, -1),                        # negative on unsigned
+    (jnp.int32, 2**31),                      # one past the max
+    (jnp.uint32, -1),
+])
+def test_deliver_fill_out_of_range_rejected(dtype, bad_fill):
+    """fill is cast to the payload dtype inside the kernel trace; an
+    unrepresentable value used to wrap silently (fill=INT_MAX on int8
+    arrives as -1).  Every delivery entry point now rejects it."""
+    from repro.kernels.alltoallv_deliver import (
+        assemble_proc_fused,
+        check_fill_range,
+        deliver_fused,
+    )
+
+    v, omega = 2, 8
+    msgs = jnp.zeros((v, v, omega), dtype)
+    cnts = jnp.ones((v, v), jnp.int32)
+    with pytest.raises(ValueError, match="fill"):
+        check_fill_range(bad_fill, dtype)
+    with pytest.raises(ValueError, match="fill"):
+        deliver(msgs, cnts, fill=bad_fill, interpret=True)
+    with pytest.raises(ValueError, match="fill"):
+        deliver_fused(msgs, cnts, fill=bad_fill, interpret=True)
+    with pytest.raises(ValueError, match="fill"):
+        assemble_proc_fused(msgs[:, None], cnts[:, None], fill=bad_fill,
+                            interpret=True)
+
+
+def test_deliver_fill_in_range_accepted():
+    from repro.kernels.alltoallv_deliver import check_fill_range
+
+    check_fill_range(np.iinfo(np.int32).max, jnp.int32)   # the PSRS sentinel
+    check_fill_range(-128, jnp.int8)
+    check_fill_range(65535, jnp.uint16)
+    check_fill_range(2**32 - 1, jnp.uint32)
+    check_fill_range(-1.5, jnp.float32)
+    with pytest.raises(ValueError, match="fill"):
+        check_fill_range(1e39, jnp.float32)               # overflows to inf
+    with pytest.raises(ValueError, match="fill"):
+        check_fill_range(2.5, jnp.int32)                  # non-integral
+
+
+def test_alltoallv_fill_out_of_range_rejected():
+    """The collective layer checks fill against the send field's dtype
+    before any trace work on every implementation path."""
+    from repro.core import ContextLayout, Pems, PemsConfig
+
+    v = 4
+    lo = (ContextLayout()
+          .add("send", (v, 2), jnp.uint32).add("recv", (v, 2), jnp.uint32)
+          .add("scnt", (v,), jnp.int32).add("rcnt", (v,), jnp.int32))
+    for use_kernel in (True, False):
+        pems = Pems(PemsConfig(v=v), lo)
+        with pytest.raises(ValueError, match="fill"):
+            pems.alltoallv(pems.init(), "send", "recv", "scnt", "rcnt",
+                           fill=-1, use_kernel=use_kernel)
+
+
 def test_deliver_boundary_masking():
     """The boundary fix-up: bytes past counts[s, d] never leak through."""
     v, omega = 4, 16
