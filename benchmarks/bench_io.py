@@ -1,0 +1,192 @@
+"""repro.io engine sweep: driver × queue depth × block size, plus the
+measured compute/I-O overlap each driver achieves under the async executor.
+
+Two sections land in ``BENCH_io.json`` (``BENCH_io.smoke.json`` under
+``BENCH_FAST=1``/``--smoke``):
+
+* ``engine`` — raw submission-queue throughput: write a file once in
+  ``block_bytes`` requests at ``queue_depth`` in flight, fsync, read it
+  back, verify.  ``mb_s`` per direction, plus the measured
+  ``max_queue_depth`` and syscall byte counts (the ``odirect`` rows show
+  the aligned inflation; ``odirect_fallback`` records whether the
+  filesystem actually honoured O_DIRECT or the documented buffered
+  fallback was taken).
+* ``psrs`` — PSRS on ``tier="file"`` per driver, sync vs async executor:
+  ``overlap_fraction`` (share of swap-in time hidden behind compute,
+  thesis §5.1) and ``rw_overlap_events`` (submissions that saw the
+  opposite direction in flight — the async engine keeps round ``r+1``'s
+  reads AND round ``r-1``'s writeback in flight during round ``r``).
+
+The regression gate (``scripts/check_bench_regression.py``) compares the
+``psrs`` rows' overlap fractions against the committed smoke baseline and
+skips ``odirect`` rows whose fallback status differs from the baseline's
+(a CI filesystem without O_DIRECT must take the fallback, not fail).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.io import IOEngine, open_file
+from repro.pems_apps import psrs_sort
+from .common import emit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DRIVERS = ("buffered", "odirect", "mmap")
+
+
+def _engine_row(td: str, driver: str, queue_depth: int, block_bytes: int,
+                file_bytes: int, rng) -> dict:
+    path = os.path.join(td, f"{driver}_{queue_depth}_{block_bytes}.bin")
+    f = open_file(path, file_bytes, driver)
+    eng = IOEngine(f, queue_depth=queue_depth)
+    data = rng.integers(0, 256, file_bytes, dtype=np.uint8)
+    try:
+        t0 = time.perf_counter()
+        for o in range(0, file_bytes, block_bytes):
+            eng.submit_write(o, data[o:o + block_bytes])
+        eng.fsync()
+        w_s = time.perf_counter() - t0
+
+        out = np.empty(file_bytes, np.uint8)
+        t0 = time.perf_counter()
+        for o in range(0, file_bytes, block_bytes):
+            eng.submit_read(o, out[o:o + block_bytes])
+        eng.drain()
+        r_s = time.perf_counter() - t0
+        data_ok = bool((out == data).all())
+        row = {
+            "driver": driver,
+            "fallback": bool(getattr(f, "fallback", False)),
+            "queue_depth": queue_depth,
+            "block_bytes": block_bytes,
+            "file_bytes": file_bytes,
+            "write_mb_s": round(file_bytes / w_s / 1e6, 1),
+            "read_mb_s": round(file_bytes / r_s / 1e6, 1),
+            "max_queue_depth": eng.max_queue_depth,
+            "queue_stall_s": round(eng.queue_stall_s, 4),
+            "fsyncs": eng.fsyncs,
+            "syscall_read_bytes": eng.syscall_read_bytes,
+            "syscall_write_bytes": eng.syscall_write_bytes,
+            "data_ok": data_ok,
+        }
+    finally:
+        eng.close()
+        os.unlink(path)
+    assert row["data_ok"], f"round-trip mismatch: {driver}"
+    return row
+
+
+def _psrs_row(td: str, driver: str, exec_driver: str, keys, v: int, k: int,
+              queue_depth: int, want) -> dict:
+    t0 = time.perf_counter()
+    out, pems = psrs_sort(
+        keys, v=v, k=k, driver=exec_driver, tier="file", io_driver=driver,
+        io_queue_depth=queue_depth,
+        backing_path=os.path.join(td, f"psrs_{driver}_{exec_driver}.bin"),
+        return_pems=True,
+    )
+    wall_s = time.perf_counter() - t0
+    assert (out == want).all(), f"file-tier sort diverged: {driver}"
+    led, ts = pems.ledger, pems.tier_stats
+    fallback = bool(getattr(getattr(pems.backing, "file", None),
+                            "fallback", False))
+    return {
+        "io_driver": driver,
+        "exec_driver": exec_driver,
+        "fallback": fallback,
+        "n": int(np.asarray(keys).size),
+        "v": v,
+        "k": k,
+        "queue_depth": queue_depth,
+        "wall_s": round(wall_s, 3),
+        "disk_read_bytes": led.disk_read_bytes,
+        "disk_write_bytes": led.disk_write_bytes,
+        "syscall_read_bytes": led.syscall_read_bytes,
+        "syscall_write_bytes": led.syscall_write_bytes,
+        "max_queue_depth": ts.max_queue_depth,
+        "queue_stall_s": round(ts.queue_stall_s, 4),
+        "rw_overlap_events": ts.rw_overlap_events,
+        "overlap_fraction": round(ts.overlap_fraction, 4),
+    }
+
+
+def run(smoke: bool | None = None) -> None:
+    if smoke is None:
+        smoke = os.environ.get("BENCH_FAST") == "1"
+    rng = np.random.default_rng(7)
+
+    if smoke:
+        depths = (1, 8)
+        blocks = (256 << 10,)
+        file_bytes = 8 << 20
+        n, v, k = 1 << 17, 16, 2
+    else:
+        depths = (1, 4, 16)
+        blocks = (64 << 10, 1 << 20)
+        file_bytes = 64 << 20
+        n, v, k = 1 << 20, 16, 2
+
+    engine_rows = []
+    psrs_rows = []
+    odirect_fallback = False
+    with tempfile.TemporaryDirectory() as td:
+        for driver in DRIVERS:
+            for qd in depths:
+                for blk in blocks:
+                    row = _engine_row(td, driver, qd, blk, file_bytes, rng)
+                    engine_rows.append(row)
+                    if driver == "odirect":
+                        odirect_fallback = row["fallback"]
+                    emit(f"io_{driver}_qd{qd}_blk{blk}", 0.0,
+                         f"write_mb_s={row['write_mb_s']};"
+                         f"read_mb_s={row['read_mb_s']};"
+                         f"depth={row['max_queue_depth']}")
+
+        keys = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+        want = np.sort(keys)
+        qd = max(depths)
+        for driver in DRIVERS:
+            for exec_driver in ("explicit", "async"):
+                row = _psrs_row(td, driver, exec_driver, keys, v, k, qd,
+                                want)
+                psrs_rows.append(row)
+                emit(f"io_psrs_{driver}_{exec_driver}", row["wall_s"] * 1e6,
+                     f"overlap={row['overlap_fraction']};"
+                     f"rw_overlap={row['rw_overlap_events']}")
+
+    out = {
+        "benchmark": "io_engine",
+        "backend": jax.default_backend(),
+        "smoke": bool(smoke),
+        "odirect_fallback": odirect_fallback,
+        "note": ("engine rows: one full-file write + fsync + read-back per "
+                 "(driver, queue_depth, block_bytes).  psrs rows: PSRS on "
+                 "tier='file'; overlap_fraction = 1 - stall_s/swap_in_s; "
+                 "rw_overlap_events > 0 on the async rows means swap-in "
+                 "reads and writeback writes were simultaneously in flight "
+                 "(both directions, §5.1)."),
+        "engine": engine_rows,
+        "psrs": psrs_rows,
+    }
+    name = "BENCH_io.smoke.json" if smoke else "BENCH_io.json"
+    with open(os.path.join(REPO_ROOT, name), "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+
+    best = max(r["overlap_fraction"] for r in psrs_rows
+               if r["exec_driver"] == "async")
+    emit("io_psrs_async_best_overlap", 0.0, f"overlap_fraction={best}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv or None)

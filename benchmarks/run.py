@@ -10,6 +10,7 @@ Figure map (see DESIGN.md §7):
   bench_psrs_mu      Fig 8.7     bench_drivers     Fig 8.12–8.14
   bench_cgm          Fig 8.15–8.20  bench_euler    Fig 8.24
   bench_roofline     §Roofline (assignment)
+  bench_io           §5.1 (async engine: driver × queue depth × block size)
 """
 
 from __future__ import annotations
@@ -24,6 +25,7 @@ from . import (
     bench_disk_space,
     bench_drivers,
     bench_euler,
+    bench_io,
     bench_psrs,
     bench_psrs_mu,
     bench_roofline,
@@ -36,6 +38,7 @@ MODULES = [
     ("psrs", bench_psrs),
     ("psrs_mu", bench_psrs_mu),
     ("drivers", bench_drivers),
+    ("io", bench_io),
     ("cgm", bench_cgm),
     ("euler", bench_euler),
     ("roofline", bench_roofline),

@@ -1,12 +1,22 @@
-"""CI benchmark regression gate for the fused Alltoallv kernel path.
+"""CI benchmark regression gates.
 
-Compares a fresh ``BENCH_alltoallv.smoke.json`` against the committed
-baseline using the *paired-sample* statistic: ``speedup_vs_dense`` is the
-median of per-iteration (dense / fused) wall-time ratios, where each pair
-ran back-to-back in the same process — machine speed cancels, so the ratio
-transfers across runner generations.  The gate fails when the kernel path
-loses more than ``--threshold`` (default 30%) of its advantage over the
-dense path on any matched config.
+Two schemas, dispatched on the files' ``benchmark`` field:
+
+* ``alltoallv`` (``BENCH_alltoallv.smoke.json``): the *paired-sample*
+  statistic — ``speedup_vs_dense`` is the median of per-iteration
+  (dense / fused) wall-time ratios, where each pair ran back-to-back in the
+  same process, so machine speed cancels and the ratio transfers across
+  runner generations.  The gate fails when the kernel path loses more than
+  ``--threshold`` (default 30%) of its advantage on any matched config.
+
+* ``io_engine`` (``BENCH_io.smoke.json``): the async executor's measured
+  compute/I-O ``overlap_fraction`` per (io_driver, exec_driver) row must not
+  collapse below the baseline by more than ``--overlap-slack`` (absolute;
+  overlap is already a within-run ratio, so it transfers across machines).
+  ``odirect`` rows are *skipped with a notice* when the two runs disagree on
+  the O_DIRECT fallback (a CI filesystem without O_DIRECT must take the
+  documented buffered fallback, not fail the gate) — but missing rows still
+  fail, so a crashed sweep cannot read as green.
 
 A machine-class guard skips the comparison (exit 0 with a notice) when the
 two files disagree on backend or sweep shape — a CPU baseline says nothing
@@ -14,6 +24,8 @@ about a TPU runner.
 
     python scripts/check_bench_regression.py \
         --baseline /tmp/baseline.json --new BENCH_alltoallv.smoke.json
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/io_baseline.json --new BENCH_io.smoke.json
 """
 
 from __future__ import annotations
@@ -28,24 +40,81 @@ def load(path: str) -> dict:
         return json.load(f)
 
 
+def check_io(base: dict, new: dict, overlap_slack: float) -> int:
+    base_rows = {(r["io_driver"], r["exec_driver"]): r for r in base["psrs"]}
+    new_rows = {(r["io_driver"], r["exec_driver"]): r for r in new["psrs"]}
+    missing = sorted(set(base_rows) - set(new_rows))
+    if missing:
+        print(f"FAIL: baseline psrs rows missing from the new run: {missing}")
+        return 1
+    eng_key = ("driver", "queue_depth", "block_bytes")
+    base_eng = {tuple(r[k] for k in eng_key) for r in base["engine"]}
+    new_eng = {tuple(r[k] for k in eng_key) for r in new["engine"]}
+    missing_eng = sorted(base_eng - new_eng)
+    if missing_eng:
+        # A sweep that silently dropped configs (crash, trimmed DRIVERS)
+        # must not read as a green gate.
+        print(f"FAIL: baseline engine rows missing from the new run: "
+              f"{missing_eng}")
+        return 1
+    bad = [r for r in new["engine"] if not r.get("data_ok", True)]
+    if bad:
+        print(f"FAIL: engine round-trip verification failed: "
+              f"{[(r['driver'], r['queue_depth']) for r in bad]}")
+        return 1
+
+    failures = []
+    for key in sorted(base_rows):
+        b, n = base_rows[key], new_rows[key]
+        if key[0] == "odirect" and b.get("fallback") != n.get("fallback"):
+            print(f"SKIP {key}: O_DIRECT fallback differs "
+                  f"(baseline={b.get('fallback')} new={n.get('fallback')}) "
+                  "— documented buffered fallback taken, not comparable")
+            continue
+        floor = max(0.0, b["overlap_fraction"] - overlap_slack)
+        status = "ok" if n["overlap_fraction"] >= floor else "REGRESSED"
+        print(f"io={key[0]:9s} exec={key[1]:9s}: overlap "
+              f"baseline={b['overlap_fraction']:.3f} "
+              f"new={n['overlap_fraction']:.3f} floor={floor:.3f} [{status}]")
+        if status != "ok":
+            failures.append(key)
+    if failures:
+        print(f"FAIL: async overlap collapsed by more than {overlap_slack} "
+              f"vs the committed baseline on rows {failures}")
+        return 1
+    print(f"OK: io-engine overlap within {overlap_slack} of the committed "
+          f"baseline on all compared rows")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--new", required=True)
     ap.add_argument("--threshold", type=float, default=1.30,
                     help="max allowed paired-ratio regression factor")
+    ap.add_argument("--overlap-slack", type=float, default=0.35,
+                    help="io_engine gate: max allowed absolute drop in "
+                         "overlap_fraction vs baseline")
     args = ap.parse_args()
 
     base = load(args.baseline)
     new = load(args.new)
 
-    # Machine-class guard: paired ratios transfer across machines of the
+    # Machine-class guard: paired ratios (and overlap fractions, which
+    # depend on compute speed per round) transfer across machines of the
     # same class, not across backends (or differently-shaped sweeps).
-    for key in ("benchmark", "backend", "v", "smoke"):
+    guard = ("benchmark", "backend", "smoke") \
+        if base.get("benchmark") == "io_engine" \
+        else ("benchmark", "backend", "v", "smoke")
+    for key in guard:
         if base.get(key) != new.get(key):
             print(f"SKIP: machine-class mismatch on {key!r}: "
                   f"baseline={base.get(key)!r} new={new.get(key)!r}")
             return 0
+
+    if base.get("benchmark") == "io_engine":
+        return check_io(base, new, args.overlap_slack)
 
     # P defaults to 1 so pre-mesh baselines keep matching.
     base_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c

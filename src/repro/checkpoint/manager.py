@@ -21,6 +21,11 @@ Designed for the preemption model of large TPU fleets:
   in ``like`` is filled *in place* and returned as-is.  Note: a non-blocking
   ``save`` snapshots memmap leaves lazily on the writer thread — do not
   mutate the backing store until ``wait()``.
+* **Engine-streamed**: the chunked memmap copies ride the
+  :mod:`repro.io` submission queue (``IOEngine`` over the ``mmap``
+  adapter), so several chunks are in flight at once instead of one
+  synchronous ``dst[i:j] = src[i:j]`` at a time — the same engine the
+  ``tier="file"`` backing store swaps through.
 """
 
 from __future__ import annotations
@@ -34,6 +39,8 @@ from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.io import IOEngine, MmapFile
 
 
 class CheckpointManager:
@@ -192,18 +199,40 @@ def _snapshot(leaf):
 
 
 _STREAM_CHUNK_BYTES = 64 << 20   # bound on resident bytes while streaming
+_STREAM_QUEUE_DEPTH = 4          # chunks in flight on the engine
 
 
 def _chunked_copy(src, dst) -> None:
     """Copy array ``src`` into ``dst`` in ≤ 64 MiB chunks along axis 0
-    (whole-array for 0-d), keeping the resident footprint bounded."""
+    (whole-array for 0-d), keeping the resident footprint bounded.
+
+    When ``dst`` is an ``np.memmap`` the chunks are submitted through a
+    :class:`repro.io.IOEngine` over the mmap adapter: each worker pages in
+    its (lazy) ``src`` chunk and stores it, so up to ``_STREAM_QUEUE_DEPTH``
+    chunk copies overlap instead of serialising on one thread.  The resident
+    bound becomes chunk × queue-depth.
+    """
     if src.ndim == 0:
         dst[...] = src
         return
     row = max(1, int(np.prod(src.shape[1:], dtype=np.int64))) * src.itemsize
-    step = max(1, _STREAM_CHUNK_BYTES // row)
-    for i in range(0, src.shape[0], step):
-        dst[i:i + step] = src[i:i + step]
+    step = max(1, _STREAM_CHUNK_BYTES // (row * _STREAM_QUEUE_DEPTH))
+    if (not isinstance(dst, np.memmap) or not dst.flags.c_contiguous
+            or not src.flags.c_contiguous):
+        # Strided/F-order leaves: the engine needs C-contiguous chunk
+        # buffers (memoryview cast) and a flat byte view of dst — numpy
+        # assignment handles these layouts instead.
+        for i in range(0, src.shape[0], step):
+            dst[i:i + step] = src[i:i + step]
+        return
+    flat = dst.reshape(-1).view(np.uint8)
+    engine = IOEngine(MmapFile(mm=flat), queue_depth=_STREAM_QUEUE_DEPTH)
+    try:
+        for i in range(0, src.shape[0], step):
+            engine.submit_write(i * row, src[i:i + step], auto_reap=True)
+        engine.drain()
+    finally:
+        engine.close()
 
 
 def _stream_to_npy(arr: np.memmap, path: str) -> None:

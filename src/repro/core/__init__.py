@@ -10,6 +10,7 @@ Public API::
 
 from . import analysis
 from .backing import (
+    FileBacking,
     HostBacking,
     MemmapBacking,
     TIERS,
@@ -36,6 +37,7 @@ __all__ = [
     "ContextStore",
     "DRIVERS",
     "Field",
+    "FileBacking",
     "HostBacking",
     "IOLedger",
     "MemmapBacking",

@@ -3,13 +3,20 @@
 The seed :class:`~repro.core.context.ContextStore` keeps all ``v`` contexts in
 one device-resident array — "external memory" is a simulation of itself.  This
 module adds the real thing: a backing tier that holds the full ``[v, words]``
-population in host RAM (``tier="host"``) or in an ``np.memmap``-backed file on
-disk (``tier="memmap"``), while only the current round's ``P·k`` contexts are
-ever resident on the device.  The executor's round loop becomes a host-driven
-pipeline over this tier (see ``executor._run_tiered``), with the ``async``
-driver double-buffering swap-ins on a prefetch thread so disk I/O overlaps
-compute — the STXXL-file driver of the thesis (§5.1) — and with only *live*
-allocator bytes moving (§6.6).
+population in host RAM (``tier="host"``), in an ``np.memmap``-backed file
+(``tier="memmap"``), or behind the :mod:`repro.io` asynchronous file engine
+(``tier="file"`` — pread/pwrite submission queues over a ``buffered``,
+``odirect``, or ``mmap`` driver), while only the current round's ``P·k``
+contexts are ever resident on the device.  The executor's round loop becomes a
+host-driven pipeline over this tier (see ``executor._run_tiered``), with the
+``async`` driver double-buffering swap-ins on a prefetch thread — and, on the
+``file`` tier, leaving writebacks in flight on the engine so reads and writes
+genuinely overlap compute (the STXXL-file driver of the thesis, §5.1) — and
+with only *live* allocator bytes moving (§6.6).
+
+Every backing exposes the same block API (``read_block``/``write_block`` over
+a row range with an optional column selection, plus ``drain``/``flush``), so
+the executor and the host-side collectives are tier-agnostic.
 
 Tier selection is per-:class:`~repro.core.executor.PemsConfig` (default
 ``"device"``: the seed path, byte-for-byte untouched).  All tiers are
@@ -22,20 +29,74 @@ from __future__ import annotations
 import os
 import tempfile
 import weakref
-from typing import Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.io import IOEngine, ensure_file_size, open_file
+
 from .context import ContextLayout, WORD
 
-TIERS = ("device", "host", "memmap")
+TIERS = ("device", "host", "memmap", "file")
 
 
 def _np_dtype(dtype) -> np.dtype:
     return np.dtype(dtype)
 
 
-class HostBacking:
+def _cols_runs(cols, words: int) -> Tuple[List[Tuple[int, int, int]], int]:
+    """Normalise a column selection into contiguous word runs.
+
+    Returns ``(runs, n)`` where each run is ``(out_start, word_start,
+    nwords)`` — ``out_start`` indexing the packed destination, ``word_start``
+    the context row — and ``n`` is the packed width.  ``cols`` may be
+    ``None`` (everything), a unit-step slice, or a sorted word-index array
+    (the executor's live/sliced index maps).
+    """
+    if cols is None:
+        return [(0, 0, words)], words
+    if isinstance(cols, slice):
+        start, stop, step = cols.indices(words)
+        if step != 1:
+            raise ValueError("column slices must be unit-step")
+        return [(0, start, stop - start)], stop - start
+    idx = np.asarray(cols)
+    n = int(idx.size)
+    if n == 0:
+        return [], 0
+    breaks = np.flatnonzero(np.diff(idx) != 1) + 1
+    starts = np.concatenate([[0], breaks])
+    ends = np.concatenate([breaks, [n]])
+    return [(int(s), int(idx[s]), int(e - s))
+            for s, e in zip(starts, ends)], n
+
+
+class _ArrayBacking:
+    """Shared block API for backings that expose a ``[v, words]`` ndarray."""
+
+    arr: np.ndarray
+
+    def read_block(self, r0: int, r1: int, cols=None) -> np.ndarray:
+        """Rows ``[r0, r1)`` with the selected columns, as a contiguous
+        uint32 host copy."""
+        rows = self.arr[r0:r1]
+        return np.ascontiguousarray(rows if cols is None else rows[:, cols])
+
+    def write_block(self, r0: int, r1: int, value, cols=None,
+                    wait: bool = True) -> None:
+        """Write rows ``[r0, r1)``; ``value`` may broadcast along rows.
+        ``wait`` exists for engine-backed tiers (here writes are
+        synchronous)."""
+        if cols is None:
+            self.arr[r0:r1] = value
+        else:
+            self.arr[r0:r1, cols] = value
+
+    def drain(self) -> None:
+        pass
+
+
+class HostBacking(_ArrayBacking):
     """Backing tier in plain host RAM: a ``[v, words]`` uint32 ndarray.
 
     Stands in for pinned host memory — on CPU backends it *is* the fastest
@@ -43,29 +104,36 @@ class HostBacking:
     """
 
     tier = "host"
+    disk = False
     path: Optional[str] = None
 
     def __init__(self, v: int, words: int):
+        self.v = v
+        self.words = words
         self.arr = np.zeros((v, words), np.uint32)
 
     @property
     def nbytes(self) -> int:
         return self.arr.nbytes
 
-    def flush(self) -> None:  # symmetry with MemmapBacking
+    def flush(self) -> None:  # symmetry with the disk backings
         pass
 
 
-class MemmapBacking:
+class MemmapBacking(_ArrayBacking):
     """Backing tier on disk: ``np.memmap`` over a (sparse) backing file.
 
     The file is created sparse at exactly ``v·μ`` bytes — the PEMS2 disk
     requirement (§6.3) — so untouched ranges cost no real disk blocks until
-    the swap engine writes them.  When no ``path`` is given a temporary file
-    is created and unlinked when the backing is garbage-collected.
+    the swap engine writes them.  A caller-provided ``path`` has
+    create-or-reuse semantics: an existing file's contents are preserved
+    (only extended when too small), so resuming from a populated backing
+    file never zeroes it.  When no ``path`` is given a temporary file is
+    created and unlinked when the backing is garbage-collected.
     """
 
     tier = "memmap"
+    disk = True
 
     def __init__(self, v: int, words: int, path: Optional[str] = None):
         owns = path is None
@@ -73,8 +141,9 @@ class MemmapBacking:
             fd, path = tempfile.mkstemp(prefix="pems_ctx_", suffix=".bin")
             os.close(fd)
         self.path = path
-        with open(path, "wb") as f:
-            f.truncate(v * words * WORD)   # sparse: no blocks allocated yet
+        self.v = v
+        self.words = words
+        ensure_file_size(path, v * words * WORD)   # sparse; never truncates
         self.arr = np.memmap(path, dtype=np.uint32, mode="r+",
                              shape=(v, words))
         if owns:
@@ -88,6 +157,138 @@ class MemmapBacking:
         self.arr.flush()
 
 
+class FileBacking:
+    """Backing tier behind the :mod:`repro.io` engine: the ``[v, words]``
+    population lives in a plain file reached only through positional
+    pread/pwrite submissions — no page-cache mapping of the store (unless
+    the ``mmap`` adapter driver is chosen), so with the ``odirect`` driver
+    the measured swap traffic is genuinely cold storage.
+
+    Reads/writes decompose into contiguous byte runs (whole row blocks for
+    full swaps; per-row field runs for sliced/live column selections) and
+    ride the engine's bounded submission queue — ``io_queue_depth`` requests
+    in flight, overlapped by the worker pool.  ``write_block(wait=False)``
+    leaves the writeback in flight: the executor's async driver uses this so
+    round ``r-1``'s swap-out and round ``r+1``'s swap-in overlap round
+    ``r``'s compute in *both* directions.
+    """
+
+    tier = "file"
+    disk = True
+
+    # Contiguous spans are split into requests of this size so a single big
+    # swap still exercises (and benefits from) the submission queue.
+    chunk_bytes = 1 << 20
+
+    def __init__(self, v: int, words: int, path: Optional[str] = None,
+                 io_driver: str = "buffered", io_queue_depth: int = 8,
+                 stats=None, ledger=None):
+        owns = path is None
+        if path is None:
+            fd, path = tempfile.mkstemp(prefix="pems_ctx_", suffix=".bin")
+            os.close(fd)
+        self.path = path
+        self.v = v
+        self.words = words
+        self.rowbytes = words * WORD
+        self.io_driver = io_driver
+        self.file = open_file(path, v * words * WORD, io_driver)
+        self.engine = IOEngine(self.file, queue_depth=io_queue_depth,
+                               stats=stats, ledger=ledger)
+        self._finalizer = weakref.finalize(
+            self, _close_quiet, self.engine, path if owns else None)
+
+    @property
+    def nbytes(self) -> int:
+        return self.v * self.rowbytes
+
+    def _whole_rows_cheaper(self, runs) -> bool:
+        """On an aligned driver (odirect) every per-row run widens to at
+        least one whole block per direction, and sub-block rows share
+        blocks (serialised RMW).  When whole rows cost no more than the
+        per-run aligned requests would, move whole rows instead: one
+        contiguous chunked transfer, no boundary conflicts."""
+        align = self.file.align
+        return align > 1 and bool(runs) and self.rowbytes <= len(runs) * align
+
+    # ------------------------------------------------------------- block API
+    def read_block(self, r0: int, r1: int, cols=None) -> np.ndarray:
+        runs, n = _cols_runs(cols, self.words)
+        rows = r1 - r0
+        if cols is not None and self._whole_rows_cheaper(runs):
+            whole = self.read_block(r0, r1, None)
+            out = np.empty((rows, n), np.uint32)
+            for j, w0, nw in runs:
+                out[:, j:j + nw] = whole[:, w0:w0 + nw]
+            return out
+        out = np.empty((rows, n), np.uint32)
+        reqs = []
+        if cols is None:
+            flat = out.reshape(-1).view(np.uint8)
+            base = r0 * self.rowbytes
+            total = rows * self.rowbytes
+            for o in range(0, total, self.chunk_bytes):
+                nb = min(self.chunk_bytes, total - o)
+                reqs.append(self.engine.submit_read(base + o,
+                                                    flat[o:o + nb]))
+        else:
+            for i in range(rows):
+                base = (r0 + i) * self.rowbytes
+                for j, w0, nw in runs:
+                    reqs.append(self.engine.submit_read(
+                        base + w0 * WORD, out[i, j:j + nw].view(np.uint8)))
+        self.engine.wait(reqs)
+        return out
+
+    def write_block(self, r0: int, r1: int, value, cols=None,
+                    wait: bool = True) -> None:
+        runs, n = _cols_runs(cols, self.words)
+        rows = r1 - r0
+        value = np.broadcast_to(np.asarray(value), (rows, n))
+        if cols is not None and self._whole_rows_cheaper(runs):
+            # Read-modify-write whole rows: cheaper than per-run aligned
+            # RMW on every row, and immune to shared-boundary-block
+            # serialisation.  Callers never write the same rows
+            # concurrently (rounds/collectives touch disjoint row ranges).
+            whole = self.read_block(r0, r1, None)
+            for j, w0, nw in runs:
+                whole[:, w0:w0 + nw] = value[:, j:j + nw]
+            self.write_block(r0, r1, whole, None, wait=wait)
+            return
+        # Fire-and-forget writebacks auto-reap their completions (errors
+        # still surface at the superstep's drain); waited writes are reaped
+        # by wait() itself.  Either way the completion list stays bounded.
+        reqs = []
+        if cols is None:
+            buf = np.ascontiguousarray(value)
+            flat = buf.reshape(-1).view(np.uint8)
+            base = r0 * self.rowbytes
+            total = rows * self.rowbytes
+            for o in range(0, total, self.chunk_bytes):
+                nb = min(self.chunk_bytes, total - o)
+                reqs.append(self.engine.submit_write(
+                    base + o, flat[o:o + nb], auto_reap=not wait))
+        else:
+            for i in range(rows):
+                base = (r0 + i) * self.rowbytes
+                for j, w0, nw in runs:
+                    reqs.append(self.engine.submit_write(
+                        base + w0 * WORD,
+                        np.ascontiguousarray(value[i, j:j + nw]),
+                        auto_reap=not wait))
+        if wait:
+            self.engine.wait(reqs)
+
+    def drain(self) -> None:
+        self.engine.drain()
+
+    def flush(self) -> None:
+        self.engine.fsync()
+
+    def close(self) -> None:
+        self._finalizer()
+
+
 def _unlink_quiet(path: str) -> None:
     try:
         os.unlink(path)
@@ -95,12 +296,28 @@ def _unlink_quiet(path: str) -> None:
         pass
 
 
+def _close_quiet(engine, unlink_path: Optional[str]) -> None:
+    try:
+        engine.close()
+    except Exception:
+        pass
+    if unlink_path is not None:
+        _unlink_quiet(unlink_path)
+
+
 def make_backing(tier: str, v: int, words: int,
-                 path: Optional[str] = None):
+                 path: Optional[str] = None, *,
+                 io_driver: Optional[str] = None, io_queue_depth: int = 8,
+                 stats=None, ledger=None):
     if tier == "host":
         return HostBacking(v, words)
     if tier == "memmap":
         return MemmapBacking(v, words, path)
+    if tier == "file":
+        return FileBacking(v, words, path,
+                           io_driver=io_driver or "buffered",
+                           io_queue_depth=io_queue_depth,
+                           stats=stats, ledger=ledger)
     raise ValueError(f"unknown backing tier {tier!r} (choose from {TIERS})")
 
 
@@ -115,9 +332,10 @@ class TieredStore:
     (``store = pems.superstep(store, ...)``) work unchanged.
 
     When constructed with a ``ledger`` (the executor always passes its own),
-    every ``field``/``with_field`` on the memmap tier records the measured
-    disk traffic — one count per physical access, including the initial data
-    load; callers touching ``backing.arr`` directly account for themselves.
+    every ``field``/``with_field`` on a disk-resident backing (``memmap``
+    and ``file`` alike) records the measured disk traffic — one count per
+    physical access, including the initial data load; callers touching the
+    backing's block API directly account for themselves.
     """
 
     def __init__(self, layout: ContextLayout, backing, ledger=None):
@@ -131,13 +349,20 @@ class TieredStore:
         return self.backing.tier
 
     @property
+    def on_disk(self) -> bool:
+        """Whether field traffic is physical disk traffic (ledger-counted)."""
+        return self.backing.disk
+
+    @property
     def data(self) -> np.ndarray:
-        """The full ``[v, words]`` uint32 population (host/disk resident)."""
+        """The full ``[v, words]`` uint32 population (host/disk resident).
+        Only array-addressable tiers (host/memmap) expose it; the ``file``
+        tier is reached through the block API."""
         return self.backing.arr
 
     @property
     def v(self) -> int:
-        return self.backing.arr.shape[0]
+        return self.backing.v
 
     @property
     def mu_bytes(self) -> int:
@@ -149,8 +374,8 @@ class TieredStore:
         matching the device store's functional reads)."""
         off = self.layout.offset(name)
         f = self.layout.field(name)
-        w = np.ascontiguousarray(self.backing.arr[:, off:off + f.words])
-        if self.ledger is not None and self.tier == "memmap":
+        w = self.backing.read_block(0, self.v, cols=slice(off, off + f.words))
+        if self.ledger is not None and self.on_disk:
             self.ledger.add_disk_read(w.nbytes)
         return w.view(_np_dtype(f.dtype)).reshape((self.v,) + f.shape)
 
@@ -162,8 +387,9 @@ class TieredStore:
         if value.dtype != _np_dtype(f.dtype):
             value = value.astype(_np_dtype(f.dtype))
         w = np.ascontiguousarray(value).reshape(self.v, f.words)
-        self.backing.arr[:, off:off + f.words] = w.view(np.uint32)
-        if self.ledger is not None and self.tier == "memmap":
+        self.backing.write_block(0, self.v, w.view(np.uint32),
+                                 cols=slice(off, off + f.words))
+        if self.ledger is not None and self.on_disk:
             self.ledger.add_disk_write(w.nbytes)
         return self
 

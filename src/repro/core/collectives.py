@@ -408,8 +408,11 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
     cfg = self.cfg
     v = cfg.v
     lo = store.layout
-    arr = store.backing.arr
-    disk = store.tier == "memmap"
+    bk = store.backing
+    # Array-addressable backings (host/memmap) stage straight from a view;
+    # the engine-backed file tier reads its chunk through the block API.
+    arr = getattr(bk, "arr", None)
+    disk = store.on_disk
     ww = lo.field_words(send) // v                 # ω in store words
     off_s, off_r = lo.offset(send), lo.offset(recv)
 
@@ -421,13 +424,19 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
         fill_word = _fill_word(fill, lo.field(send).dtype)
 
     alpha = v if cfg.alpha is None else cfg.alpha
+    # Host/memmap chunks are sliced as views; the engine-backed file tier's
+    # read_block returns a *copy* the same size as the staging buffer, so a
+    # chunk there holds 2x its column bytes resident (copy + blk).  The
+    # in-place path slices views off the snapshot either way.
+    chunk_copies = 1 if (arr is not None or send == recv) else 2
     if cfg.device_cap_bytes is not None:
-        per_dst = v * ww * WORD                    # one destination column
+        per_dst = chunk_copies * v * ww * WORD     # one destination column
         if per_dst > cfg.device_cap_bytes:
             raise ValueError(
                 f"alltoallv staging needs {per_dst:,} bytes per destination "
-                f"([v, ω] = [{v}, {ww * WORD}B]) but device_cap_bytes="
-                f"{cfg.device_cap_bytes:,}; raise the cap or shrink ω"
+                f"([v, ω] = [{v}, {ww * WORD}B] x{chunk_copies}) but "
+                f"device_cap_bytes={cfg.device_cap_bytes:,}; raise the cap "
+                "or shrink ω"
             )
         alpha = min(alpha, cfg.device_cap_bytes // per_dst)
     full = None
@@ -448,7 +457,7 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
                 f"device_cap_bytes={cfg.device_cap_bytes:,}; use distinct "
                 "send/recv fields or raise the cap"
             )
-        full = _np.ascontiguousarray(arr[:, off_s:off_s + v * ww])
+        full = bk.read_block(0, v, cols=slice(off_s, off_s + v * ww))
         if disk:
             self.ledger.add_disk_read(full.nbytes)
 
@@ -457,21 +466,26 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
         c1 = min(c0 + alpha, v)
         if full is not None:
             cols = full[:, c0 * ww:c1 * ww]
-        else:
+        elif arr is not None:
             cols = arr[:, off_s + c0 * ww:off_s + c1 * ww]
+        else:
+            cols = bk.read_block(
+                0, v, cols=slice(off_s + c0 * ww, off_s + c1 * ww))
         blk = _np.empty((c1 - c0, v, ww), _np.uint32)   # the staging buffer
         blk[...] = _np.swapaxes(cols.reshape(v, c1 - c0, ww), 0, 1)
         if disk and full is None:
             self.ledger.add_disk_read(blk.nbytes)
         stats.peak_stage_bytes = max(
             stats.peak_stage_bytes,
-            blk.nbytes + (full.nbytes if full is not None else 0),
+            chunk_copies * blk.nbytes
+            + (full.nbytes if full is not None else 0),
         )
         if fill is not None:
             lane = _np.arange(ww)[None, None, :]
             _np.copyto(blk, fill_word,
                        where=lane >= Ct[c0:c1, :, None].astype(_np.int64))
-        arr[c0:c1, off_r:off_r + v * ww] = blk.reshape(c1 - c0, v * ww)
+        bk.write_block(c0, c1, blk.reshape(c1 - c0, v * ww),
+                       cols=slice(off_r, off_r + v * ww))
         if disk:
             self.ledger.add_disk_write(blk.nbytes)
     if Ct is not None:
@@ -570,9 +584,11 @@ def bcast(self, store: ContextStore, field: str, root: int = 0) -> ContextStore:
         # Read only the root context's field range off the backing store.
         off = store.layout.offset(field)
         nw = store.layout.field_words(field)
-        row = _np.ascontiguousarray(store.backing.arr[root, off:off + nw])
-        store.backing.arr[:, off:off + nw] = row[None, :]
-        if store.tier == "memmap":
+        row = store.backing.read_block(root, root + 1,
+                                       cols=slice(off, off + nw))
+        store.backing.write_block(0, store.v, row,   # [1, nw] → every row
+                                  cols=slice(off, off + nw))
+        if store.on_disk:
             self.ledger.add_disk_read(row.nbytes)
             self.ledger.add_disk_write(store.v * row.nbytes)
     else:
@@ -609,8 +625,9 @@ def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
         w = _np.ascontiguousarray(A.astype(_np.dtype(fr.dtype))).reshape(-1)
         off = store.layout.offset(recv)
         # Only the root context's recv range is touched on the backing store.
-        store.backing.arr[root, off:off + w.size] = w.view(_np.uint32)
-        if store.tier == "memmap":
+        store.backing.write_block(root, root + 1, w.view(_np.uint32)[None],
+                                  cols=slice(off, off + w.size))
+        if store.on_disk:
             self.ledger.add_disk_write(w.nbytes)
     else:
         A = store.field(send)                  # [v, ...] gathered result
@@ -641,8 +658,9 @@ def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
         w = _np.ascontiguousarray(
             A.astype(_np.dtype(store.layout.field(recv).dtype))).reshape(-1)
         off = store.layout.offset(recv)
-        store.backing.arr[:, off:off + w.size] = w.view(_np.uint32)[None, :]
-        if store.tier == "memmap":
+        store.backing.write_block(0, cfg.v, w.view(_np.uint32)[None],
+                                  cols=slice(off, off + w.size))
+        if store.on_disk:
             self.ledger.add_disk_write(cfg.v * w.nbytes)
         self.tier_stats.peak_stage_bytes = max(
             self.tier_stats.peak_stage_bytes, w.nbytes)
@@ -667,8 +685,9 @@ def reduce(self, store: ContextStore, field: str, out_field: str,
         w = _np.ascontiguousarray(
             red.astype(_np.dtype(fr.dtype))).reshape(-1)
         off = store.layout.offset(out_field)
-        store.backing.arr[root, off:off + w.size] = w.view(_np.uint32)
-        if store.tier == "memmap":
+        store.backing.write_block(root, root + 1, w.view(_np.uint32)[None],
+                                  cols=slice(off, off + w.size))
+        if store.on_disk:
             self.ledger.add_disk_write(w.nbytes)
     else:
         vals = store.field(field)              # [v, n]

@@ -19,16 +19,20 @@ Drivers (§5):
 All drivers produce bit-identical results; they differ in bytes moved (the
 ledger) and in schedule (wall-clock benchmarks).
 
-Backing tiers (``repro.core.backing``): with ``tier="host"`` or
-``tier="memmap"`` the full ``[v, words]`` population lives off-device (host
-RAM or an ``np.memmap`` file) and the round loop becomes a *host-driven*
-pipeline: each round's ``k`` contexts — live allocator bytes only (§6.6) —
-are ``jax.device_put`` onto the device, computed, and written back.  Under
-the ``async`` driver a prefetch thread issues round ``r+1``'s swap-in while
-round ``r`` computes, so the disk/PCIe transfer genuinely overlaps compute
-(the STXXL-file driver, §5.1) rather than merely reordering on-device
-copies.  The ledger records the measured per-tier traffic alongside the
-modeled counters, and ``Pems.tier_stats`` the wall-clock overlap.
+Backing tiers (``repro.core.backing``): with ``tier="host"``, ``"memmap"``
+or ``"file"`` the full ``[v, words]`` population lives off-device (host RAM,
+an ``np.memmap`` file, or a file behind the :mod:`repro.io` engine) and the
+round loop becomes a *host-driven* pipeline: each round's ``k`` contexts —
+live allocator bytes only (§6.6) — are ``jax.device_put`` onto the device,
+computed, and written back.  Under the ``async`` driver a prefetch thread
+issues round ``r+1``'s swap-in while round ``r`` computes, so the disk/PCIe
+transfer genuinely overlaps compute (the STXXL-file driver, §5.1) rather
+than merely reordering on-device copies; on the ``file`` tier the writeback
+is additionally left in flight on the engine's submission queue, so round
+``r-1``'s swap-out and round ``r+1``'s swap-in overlap round ``r``'s compute
+in *both* directions (visible in ``TierStats.rw_overlap_events``).  The
+ledger records the measured per-tier traffic alongside the modeled counters,
+and ``Pems.tier_stats`` the wall-clock overlap.
 """
 
 from __future__ import annotations
@@ -43,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.io import IO_DRIVERS
 
 from .backing import TIERS, TieredStore, make_backing
 from .context import (
@@ -78,15 +84,39 @@ class PemsConfig:
     driver: str = "explicit"
     alpha: Optional[int] = None  # Alltoallv network chunk (messages at once)
     vp_axis: str = "vp"
-    tier: str = "device"        # backing tier: device | host | memmap
-    backing_path: Optional[str] = None   # memmap tier: backing file location
+    tier: str = "device"        # backing tier: device | host | memmap | file
+    backing_path: Optional[str] = None   # disk tiers: backing file location
     device_cap_bytes: Optional[int] = None  # device-memory budget for contexts
+    io_driver: Optional[str] = None  # file tier: buffered | odirect | mmap
+    io_queue_depth: int = 8     # file tier: bounded in-flight engine requests
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
             raise ValueError(f"unknown driver {self.driver!r}")
         if self.tier not in TIERS:
             raise ValueError(f"unknown tier {self.tier!r} (choose from {TIERS})")
+        # The repro.io knobs fail here, at construction, like every other
+        # config field — not deep inside make_backing at run time.
+        if self.tier == "file":
+            if self.io_driver is None:
+                self.io_driver = "buffered"
+            if self.io_driver not in IO_DRIVERS:
+                raise ValueError(
+                    f"unknown io_driver {self.io_driver!r} "
+                    f"(choose from {IO_DRIVERS})"
+                )
+        elif self.io_driver is not None:
+            raise ValueError(
+                f"io_driver={self.io_driver!r} requires tier='file' "
+                f"(got tier={self.tier!r})"
+            )
+        if (self.io_queue_depth != int(self.io_queue_depth)
+                or self.io_queue_depth < 1):
+            raise ValueError(
+                f"io_queue_depth={self.io_queue_depth!r} must be an "
+                "integer >= 1"
+            )
+        self.io_queue_depth = int(self.io_queue_depth)
         if self.v % self.P:
             raise ValueError("v must be divisible by P")
         if (self.v // self.P) % self.k:
@@ -135,6 +165,7 @@ class Pems:
         self.mesh = mesh
         self.ledger = IOLedger()
         self.tier_stats = TierStats()
+        self.backing = None   # last backing this executor created (tiered)
         if cfg.P > 1 and mesh is None:
             raise ValueError("P > 1 requires a mesh with the vp axis")
         if mesh is not None and mesh.shape[cfg.vp_axis] != cfg.P:
@@ -156,7 +187,7 @@ class Pems:
                 raise ValueError(
                     f"device-resident contexts need {need:,} bytes ({what}) "
                     f"but device_cap_bytes={cfg.device_cap_bytes:,}; "
-                    "lower k or use tier='host'/'memmap'"
+                    "lower k or use tier='host'/'memmap'/'file'"
                 )
         # PEMS2 disk requirement: exactly vμ/P per real processor (§6.3).
         self.ledger.require_disk(cfg.v * layout.mu_bytes // cfg.P)
@@ -167,6 +198,9 @@ class Pems:
         """Create the context population.  ``tier`` (default: the config's)
         selects device residency or a host/disk backing store."""
         tier = self.cfg.tier if tier is None else tier
+        if tier not in TIERS:
+            # Validate the override as early as the config's own tier.
+            raise ValueError(f"unknown tier {tier!r} (choose from {TIERS})")
         if tier != "device":
             return self._init_tiered(init_fn, tier,
                                      backing_path or self.cfg.backing_path)
@@ -182,7 +216,11 @@ class Pems:
     def _init_tiered(self, init_fn, tier: str,
                      backing_path: Optional[str]) -> TieredStore:
         cfg, lo = self.cfg, self.layout
-        backing = make_backing(tier, cfg.v, lo.words, backing_path)
+        backing = make_backing(tier, cfg.v, lo.words, backing_path,
+                               io_driver=cfg.io_driver,
+                               io_queue_depth=cfg.io_queue_depth,
+                               stats=self.tier_stats, ledger=self.ledger)
+        self.backing = backing
         store = TieredStore(lo, backing, self.ledger)
         if init_fn is not None:
             # Populate k contexts at a time so the device never holds more
@@ -196,7 +234,7 @@ class Pems:
             chunk = jax.jit(jax.vmap(one))
             for r0 in range(0, cfg.v, cfg.k):
                 rhos = jnp.arange(r0, r0 + cfg.k, dtype=jnp.int32)
-                backing.arr[r0:r0 + cfg.k] = np.asarray(chunk(rhos))
+                backing.write_block(r0, r0 + cfg.k, np.asarray(chunk(rhos)))
         return store
 
     def store_spec(self) -> P:
@@ -302,24 +340,28 @@ class Pems:
 
     def _run_tiered(self, store: TieredStore, body, in_idx, out_idx) -> None:
         cfg, stats, led = self.cfg, self.tier_stats, self.ledger
-        arr = store.backing.arr
-        disk = store.tier == "memmap"
+        bk = store.backing
+        disk = bk.disk
         k = cfg.k
         rounds = cfg.v // k
+        use_async = cfg.driver == "async" and rounds > 1
+        # Engine-backed tier + async driver: leave the writeback in flight on
+        # the submission queue instead of blocking the round loop — rounds
+        # touch disjoint context rows, so the only ordering requirement is
+        # the final drain.  Round r's compute then overlaps round r+1's
+        # swap-in (prefetch thread) AND round r-1's swap-out (engine queue):
+        # true read+write overlap, measured by TierStats.rw_overlap_events.
+        async_writeback = use_async and getattr(bk, "engine", None) is not None
 
         def fetch(r):
             t0 = time.perf_counter()
-            rows = arr[r * k:(r + 1) * k]
-            h = np.ascontiguousarray(
-                rows if in_idx is None else rows[:, in_idx]
-            )
+            h = bk.read_block(r * k, (r + 1) * k, cols=in_idx)
             d = jax.device_put(h)
             d.block_until_ready()
             led.add_tier_in(h.nbytes, disk)
             stats.swap_in_s += time.perf_counter() - t0
             return d
 
-        use_async = cfg.driver == "async" and rounds > 1
         pool = ThreadPoolExecutor(max_workers=1) if use_async else None
         try:
             nxt = pool.submit(fetch, 0) if use_async else None
@@ -343,16 +385,17 @@ class Pems:
                 stats.compute_s += time.perf_counter() - t0
 
                 t0 = time.perf_counter()
-                if out_idx is None:
-                    arr[r * k:(r + 1) * k] = out_h
-                else:
-                    arr[r * k:(r + 1) * k, out_idx] = out_h
+                bk.write_block(r * k, (r + 1) * k, out_h, cols=out_idx,
+                               wait=not async_writeback)
                 led.add_tier_out(out_h.nbytes, disk)
                 stats.swap_out_s += time.perf_counter() - t0
                 stats.rounds += 1
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
+            # Quiesce in-flight engine writebacks before anyone reads the
+            # rows back (and so errors surface here, not at a later read).
+            bk.drain()
 
     # ----------------------------------------------------------- round bodies
     def _run_rounds(self, local_data, body, dev):

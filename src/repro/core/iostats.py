@@ -56,8 +56,16 @@ class IOLedger:
     # recorded at execution time — excluded from the modeled ``io_total``).
     h2d_bytes: int = 0        # host → device transfers (swap-in)
     d2h_bytes: int = 0        # device → host transfers (swap-out)
-    disk_read_bytes: int = 0  # bytes read from the memmap backing file
-    disk_write_bytes: int = 0  # bytes written to the memmap backing file
+    disk_read_bytes: int = 0  # bytes read from the disk backing file
+    disk_write_bytes: int = 0  # bytes written to the disk backing file
+
+    # Syscall-level counters from the ``repro.io`` engine (``tier="file"``):
+    # the bytes each pread/pwrite actually asked the kernel for.  Under the
+    # ``odirect`` driver these are block-aligned and can exceed the logical
+    # ``disk_*_bytes`` above (read-modify-write of boundary blocks); they are
+    # the numbers to validate against ``os.stat`` block accounting.
+    syscall_read_bytes: int = 0
+    syscall_write_bytes: int = 0
 
     # ------------------------------------------------------------------ totals
     @property
@@ -179,6 +187,15 @@ class TierStats:
     peak_stage_bytes: int = 0  # largest host staging buffer a tiered
                                # collective allocated (≤ device_cap_bytes
                                # when the cap is set — see _alltoallv_host)
+
+    # repro.io engine instrumentation (tier="file"): measured at the
+    # submission/completion queues, not modeled.
+    max_queue_depth: int = 0   # high-water mark of in-flight requests
+    queue_stall_s: float = 0.0  # submit-side blocking on a full queue
+    fsyncs: int = 0            # durability barriers issued by the engine
+    rw_overlap_events: int = 0  # submissions that observed the *opposite*
+                                # direction already in flight — >0 means
+                                # reads and writes genuinely overlapped
 
     @property
     def overlap_fraction(self) -> float:

@@ -1,0 +1,37 @@
+"""repro.io — asynchronous file I/O engine (PEMS2 §5.1 made real).
+
+An io_uring-style submission/completion-queue engine
+(:class:`~repro.io.engine.IOEngine`) over three positional-I/O drivers
+(:mod:`repro.io.drivers`): page-cached ``buffered``, page-cache-bypassing
+``odirect`` (4 KiB-aligned buffer pool, documented buffered fallback where
+unsupported), and an ``mmap`` adapter wrapping the historical memmap path.
+``repro.core.backing.FileBacking`` (``tier="file"``) and the checkpoint
+manager stream through it; ``benchmarks/bench_io.py`` sweeps it.
+"""
+
+from .aligned import ALIGN, AlignedPool, aligned_empty, align_down, align_up
+from .drivers import (
+    BufferedFile,
+    IO_DRIVERS,
+    MmapFile,
+    ODirectFile,
+    ensure_file_size,
+    open_file,
+)
+from .engine import IOEngine, IORequest
+
+__all__ = [
+    "ALIGN",
+    "AlignedPool",
+    "BufferedFile",
+    "IOEngine",
+    "IORequest",
+    "IO_DRIVERS",
+    "MmapFile",
+    "ODirectFile",
+    "aligned_empty",
+    "align_down",
+    "align_up",
+    "ensure_file_size",
+    "open_file",
+]

@@ -1,0 +1,272 @@
+"""io_uring-style asynchronous file I/O engine.
+
+The PEMS2 thesis' headline feature is asynchronous disk I/O that overlaps
+swap traffic with compute (§5.1).  This engine makes that overlap real for
+file-backed tiers: callers *submit* positional reads/writes into a bounded
+queue and *poll*/*drain* completions, while a small worker pool executes the
+transfers through one of the :mod:`repro.io.drivers` — so round ``r+1``'s
+swap-in and round ``r-1``'s writeback are both in flight during round ``r``'s
+compute, with measured queue-depth/stall/overlap counters instead of hope.
+
+Semantics:
+
+* ``submit_read(offset, out)`` / ``submit_write(offset, data)`` return an
+  :class:`IORequest` immediately.  At most ``queue_depth`` requests are in
+  flight; a submit into a full queue blocks (the measured
+  ``queue_stall_s``) — backpressure, exactly like a full io_uring SQ.
+* ``poll()`` returns (and forgets) completed requests without blocking.
+* ``wait(reqs)`` blocks until the given requests complete; ``drain()``
+  until *all* in-flight requests complete.  Both re-raise the first worker
+  error.  After ``drain()``, ``in_flight == 0`` — guaranteed quiescence.
+* For drivers with an alignment unit (``odirect``), requests whose aligned
+  block ranges overlap are serialised when either is a write — the
+  read-modify-write of boundary blocks would otherwise race.
+
+The engine mirrors its measurements into the caller's
+:class:`~repro.core.iostats.TierStats`-shaped object (``max_queue_depth``,
+``queue_stall_s``, ``fsyncs``, ``rw_overlap_events``) and
+:class:`~repro.core.iostats.IOLedger`-shaped object
+(``syscall_read_bytes``/``syscall_write_bytes``); both are duck-typed so
+this module stays import-independent of :mod:`repro.core`.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import List, Optional
+
+from .aligned import align_down, align_up
+
+_MAX_WORKERS = 16
+
+
+class IORequest:
+    """One submitted transfer.  ``wait()`` blocks until completion and
+    re-raises any worker error; ``done`` is non-blocking."""
+
+    __slots__ = ("op", "offset", "nbytes", "data", "out", "syscall_bytes",
+                 "error", "auto_reap", "_a0", "_a1", "_event")
+
+    def __init__(self, op: str, offset: int, nbytes: int, data, out,
+                 align: int, auto_reap: bool = False):
+        self.op = op                    # "read" | "write"
+        self.offset = offset
+        self.nbytes = nbytes
+        self.data = data                # write source (held until complete)
+        self.out = out                  # read destination buffer
+        self.syscall_bytes = 0
+        self.auto_reap = auto_reap      # fire-and-forget: skip _completed
+        self.error: Optional[BaseException] = None
+        self._a0 = align_down(offset, align) if align > 1 else offset
+        self._a1 = (align_up(offset + nbytes, align) if align > 1
+                    else offset + nbytes)
+        self._event = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self) -> "IORequest":
+        self._event.wait()
+        if self.error is not None:
+            raise self.error
+        return self
+
+
+class IOEngine:
+    """Bounded submission/completion queues over one driver file."""
+
+    def __init__(self, file, queue_depth: int = 8, stats=None, ledger=None,
+                 workers: Optional[int] = None):
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.file = file
+        self.queue_depth = queue_depth
+        self.stats = stats
+        self.ledger = ledger
+        self._slots = threading.Semaphore(queue_depth)
+        self._lock = threading.Lock()
+        self._stats_lock = threading.Lock()   # guards _bump only; may be
+                                              # taken while holding _lock
+        self._quiet = threading.Condition(self._lock)
+        self._inflight: List[IORequest] = []
+        self._completed: List[IORequest] = []
+        self._reads = 0
+        self._writes = 0
+        self._closed = False
+        # Local mirrors of the duck-typed stats (always available, e.g. for
+        # a standalone engine in benchmarks/tests).
+        self.max_queue_depth = 0
+        self.queue_stall_s = 0.0
+        self.fsyncs = 0
+        self.rw_overlap_events = 0
+        self.syscall_read_bytes = 0
+        self.syscall_write_bytes = 0
+        # Test hook: workers block here before touching the file, so tests
+        # can hold requests in flight deterministically.  Set by default.
+        self._gate = threading.Event()
+        self._gate.set()
+        self._pool = ThreadPoolExecutor(
+            max_workers=workers or min(queue_depth, _MAX_WORKERS),
+            thread_name_prefix="repro-io",
+        )
+
+    # ------------------------------------------------------------- submission
+    def submit_read(self, offset: int, out,
+                    auto_reap: bool = False) -> IORequest:
+        """Read ``len(out)`` bytes at ``offset`` into the writable buffer
+        ``out`` (filled by completion time)."""
+        req = IORequest("read", offset, memoryview(out).cast("B").nbytes,
+                        None, out, self.file.align, auto_reap)
+        return self._submit(req)
+
+    def submit_write(self, offset: int, data,
+                     auto_reap: bool = False) -> IORequest:
+        """Write the buffer ``data`` at ``offset``.  The engine holds a
+        reference until completion — callers may drop theirs immediately.
+        ``auto_reap=True`` marks a fire-and-forget request: a successful
+        completion is dropped instead of queued for ``poll`` (errors are
+        still kept for ``drain``), so an unbounded stream of async
+        writebacks does not grow the completion list."""
+        req = IORequest("write", offset, memoryview(data).cast("B").nbytes,
+                        data, None, self.file.align, auto_reap)
+        return self._submit(req)
+
+    def _submit(self, req: IORequest) -> IORequest:
+        if self._closed:
+            raise RuntimeError("submit on a closed IOEngine")
+        if not self._slots.acquire(blocking=False):
+            t0 = time.perf_counter()
+            self._slots.acquire()
+            self._bump("queue_stall_s", time.perf_counter() - t0)
+        with self._lock:
+            if ((req.op == "read" and self._writes > 0)
+                    or (req.op == "write" and self._reads > 0)):
+                self._bump("rw_overlap_events", 1)
+            if self.file.align > 1:
+                # Serialise aligned-range conflicts: an O_DIRECT boundary
+                # block is read-modify-written, so two requests touching the
+                # same block (either being a write) must not interleave.
+                while self._conflicts(req):
+                    self._quiet.wait()
+            self._inflight.append(req)
+            if req.op == "read":
+                self._reads += 1
+            else:
+                self._writes += 1
+            depth = len(self._inflight)
+            self.max_queue_depth = max(self.max_queue_depth, depth)
+            if self.stats is not None:
+                self.stats.max_queue_depth = max(
+                    self.stats.max_queue_depth, depth)
+        self._pool.submit(self._execute, req)
+        return req
+
+    def _conflicts(self, req: IORequest) -> bool:
+        for r in self._inflight:
+            if (r._a0 < req._a1 and req._a0 < r._a1
+                    and ("write" in (r.op, req.op))):
+                return True
+        return False
+
+    # -------------------------------------------------------------- execution
+    def _execute(self, req: IORequest) -> None:
+        self._gate.wait()
+        try:
+            if req.op == "read":
+                n = self.file.pread_into(req.offset, req.out)
+            else:
+                n = self.file.pwrite(req.offset, req.data)
+            req.syscall_bytes = n
+        except BaseException as e:   # propagate through wait()/drain()
+            req.error = e
+        with self._lock:
+            self._inflight.remove(req)
+            if req.op == "read":
+                self._reads -= 1
+                if req.error is None:
+                    self.syscall_read_bytes += req.syscall_bytes
+                    if self.ledger is not None:
+                        self.ledger.syscall_read_bytes += req.syscall_bytes
+            else:
+                self._writes -= 1
+                if req.error is None:
+                    self.syscall_write_bytes += req.syscall_bytes
+                    if self.ledger is not None:
+                        self.ledger.syscall_write_bytes += req.syscall_bytes
+            req.data = None          # free the held write buffer …
+            req.out = None           # … and the read destination reference
+            if not req.auto_reap or req.error is not None:
+                self._completed.append(req)
+            self._quiet.notify_all()
+        req._event.set()
+        self._slots.release()
+
+    # ------------------------------------------------------------- completion
+    def poll(self) -> List[IORequest]:
+        """Completed-so-far requests (each reaped exactly once, like CQEs).
+        A polled request's error is the caller's to inspect — ``drain()``
+        only re-raises errors of requests nobody has reaped yet."""
+        with self._lock:
+            done, self._completed = self._completed, []
+        return done
+
+    def wait(self, reqs) -> None:
+        """Block until every request in ``reqs`` completes; raise the first
+        error.  Reaps the waited requests (their errors are this caller's,
+        and the completion list must not grow with every wait-style batch),
+        so a later ``poll``/``drain`` no longer sees them."""
+        reqs = list(reqs)
+        err = None
+        for r in reqs:
+            r._event.wait()
+            if err is None and r.error is not None:
+                err = r.error
+        with self._lock:
+            waited = set(reqs)
+            self._completed = [c for c in self._completed
+                               if c not in waited]
+        if err is not None:
+            raise err
+
+    def drain(self) -> None:
+        """Block until no request is in flight.  On return,
+        ``in_flight == 0`` and every error raised."""
+        with self._quiet:
+            while self._inflight:
+                self._quiet.wait()
+            done, self._completed = self._completed, []
+        for r in done:
+            if r.error is not None:
+                raise r.error
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    # ------------------------------------------------------------- durability
+    def fsync(self) -> None:
+        """Drain, then push everything to stable storage."""
+        self.drain()
+        self.file.flush()
+        self._bump("fsyncs", 1)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self.drain()
+        self._closed = True
+        self._pool.shutdown(wait=True)
+        self.file.close()
+
+    # ---------------------------------------------------------------- helpers
+    def _bump(self, name: str, val) -> None:
+        # Concurrent submitters (main writeback + prefetch reads) can stall
+        # simultaneously; the read-modify-write must not lose increments.
+        with self._stats_lock:
+            setattr(self, name, getattr(self, name) + val)
+            if self.stats is not None:
+                setattr(self.stats, name, getattr(self.stats, name) + val)

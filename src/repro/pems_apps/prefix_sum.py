@@ -16,7 +16,8 @@ from repro.core import ContextLayout, Pems, PemsConfig
 
 
 def _build(v: int, k: int, n_v: int, driver: str, tier: str = "device",
-           backing_path=None, device_cap_bytes=None):
+           backing_path=None, device_cap_bytes=None,
+           io_driver=None, io_queue_depth=None):
     lo = (
         ContextLayout()
         .add("x", (n_v,), jnp.int32)
@@ -25,9 +26,14 @@ def _build(v: int, k: int, n_v: int, driver: str, tier: str = "device",
         .add("offs", (v,), jnp.int32)
         .add("res", (n_v,), jnp.int32)
     )
+    io_kw = {}
+    if io_driver is not None:
+        io_kw["io_driver"] = io_driver
+    if io_queue_depth is not None:
+        io_kw["io_queue_depth"] = io_queue_depth
     pems = Pems(PemsConfig(v=v, k=k, driver=driver, tier=tier,
                            backing_path=backing_path,
-                           device_cap_bytes=device_cap_bytes), lo)
+                           device_cap_bytes=device_cap_bytes, **io_kw), lo)
 
     def local_total(rho, ctx):
         return ctx.set("tot", ctx.get("x").sum()[None])
@@ -61,7 +67,8 @@ def _build(v: int, k: int, n_v: int, driver: str, tier: str = "device",
 
 def prefix_sum(x, v: int, k: int = 1, driver: str = "explicit",
                return_pems: bool = False, tier: str = "device",
-               backing_path=None, device_cap_bytes=None):
+               backing_path=None, device_cap_bytes=None,
+               io_driver=None, io_queue_depth=None):
     """Inclusive prefix sum of int32 ``x`` ([n], n divisible by v) on PEMS."""
     x = jnp.asarray(x, jnp.int32)
     n = x.shape[0]
@@ -69,7 +76,9 @@ def prefix_sum(x, v: int, k: int = 1, driver: str = "explicit",
         raise ValueError(f"n={n} must be divisible by v={v}")
     pems, program = _build(v, k, n // v, driver, tier=tier,
                            backing_path=backing_path,
-                           device_cap_bytes=device_cap_bytes)
+                           device_cap_bytes=device_cap_bytes,
+                           io_driver=io_driver,
+                           io_queue_depth=io_queue_depth)
     data = x.reshape(v, n // v)
     if tier != "device":
         data = np.asarray(data)

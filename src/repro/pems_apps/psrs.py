@@ -30,7 +30,8 @@ from .common import INT_MAX, group_by_dest
 def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
            mode: str, local_sort, use_kernel: bool = True,
            tier: str = "device", backing_path=None, device_cap_bytes=None,
-           P: int = 1, mesh=None, alpha=None):
+           P: int = 1, mesh=None, alpha=None,
+           io_driver=None, io_queue_depth=None):
     # One home for the PSRS capacity defaults: the always-safe per-message
     # bound n/v and the 2n/v per-receiver guarantee.
     cap = n_v if cap is None else cap
@@ -49,9 +50,15 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         .add("rcount", (1,), jnp.int32)
         .add("oflow", (1,), jnp.int32)
     )
+    io_kw = {}
+    if io_driver is not None:
+        io_kw["io_driver"] = io_driver
+    if io_queue_depth is not None:
+        io_kw["io_queue_depth"] = io_queue_depth
     pems = Pems(PemsConfig(v=v, k=k, P=P, driver=driver, tier=tier,
                            backing_path=backing_path, alpha=alpha,
-                           device_cap_bytes=device_cap_bytes), lo, mesh=mesh)
+                           device_cap_bytes=device_cap_bytes, **io_kw),
+                lo, mesh=mesh)
 
     def sort_and_sample(rho, ctx):
         data = local_sort(ctx.get("data"))
@@ -165,6 +172,8 @@ def psrs_plan(
     P: int = 1,
     mesh=None,
     alpha=None,
+    io_driver=None,
+    io_queue_depth=None,
 ):
     """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
 
@@ -177,6 +186,7 @@ def psrs_plan(
         v, k, n_v, cap, rcap, driver, mode, local_sort,
         use_kernel=use_kernel, tier=tier, backing_path=backing_path,
         device_cap_bytes=device_cap_bytes, P=P, mesh=mesh, alpha=alpha,
+        io_driver=io_driver, io_queue_depth=io_queue_depth,
     )
     return pems, load, steps, extract
 
@@ -198,6 +208,8 @@ def psrs_sort(
     P: int = 1,
     mesh=None,
     alpha=None,
+    io_driver=None,
+    io_queue_depth=None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
@@ -209,9 +221,12 @@ def psrs_sort(
     either way; kept for equivalence testing).
 
     ``tier`` selects where the context population lives: ``"device"`` (the
-    seed in-memory path, whole program jitted), ``"host"`` (host RAM) or
-    ``"memmap"`` (a disk backing file at ``backing_path``) — the out-of-core
-    paths, host-driven with only k·μ device-resident at a time, optionally
+    seed in-memory path, whole program jitted), ``"host"`` (host RAM),
+    ``"memmap"`` (a disk backing file at ``backing_path``) or ``"file"``
+    (the same file reached through the :mod:`repro.io` async engine —
+    ``io_driver`` picks ``buffered``/``odirect``/``mmap``,
+    ``io_queue_depth`` bounds in-flight requests) — the out-of-core paths,
+    host-driven with only k·μ device-resident at a time, optionally
     enforced via ``device_cap_bytes``.  All tiers sort bit-identically.
 
     ``P``/``mesh`` run the simulation over ``P`` real processors (a jax
@@ -230,7 +245,9 @@ def psrs_sort(
                               use_kernel=use_kernel, tier=tier,
                               backing_path=backing_path,
                               device_cap_bytes=device_cap_bytes,
-                              P=P, mesh=mesh, alpha=alpha)
+                              P=P, mesh=mesh, alpha=alpha,
+                              io_driver=io_driver,
+                              io_queue_depth=io_queue_depth)
     data = keys.reshape(v, n_v)
     if tier != "device":
         data = np.asarray(data)

@@ -1,0 +1,452 @@
+"""repro.io engine + tier="file" backing: submission/completion semantics,
+O_DIRECT alignment and stat-level accounting, create-or-reuse backing files
+(crash consistency: flush-then-reopen round-trips), config validation, and
+PSRS bit-identity across the io-driver × executor-driver matrix (subprocess
+pinned against the device-tier reference)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ContextLayout,
+    FileBacking,
+    MemmapBacking,
+    Pems,
+    PemsConfig,
+    WORD,
+)
+from repro.io import ALIGN, IOEngine, open_file
+from repro.pems_apps import psrs_sort
+
+IO_DRIVERS = ("buffered", "odirect", "mmap")
+
+
+# --------------------------------------------------------------------------- #
+# Engine semantics                                                             #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("driver", IO_DRIVERS)
+def test_engine_round_trip(tmp_path, driver):
+    size = 1 << 18
+    path = str(tmp_path / f"{driver}.bin")
+    f = open_file(path, size, driver)
+    eng = IOEngine(f, queue_depth=4)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size, dtype=np.uint8)
+    try:
+        eng.wait([eng.submit_write(o, data[o:o + 8192])
+                  for o in range(0, size, 8192)])
+        eng.fsync()
+        out = np.empty(size, np.uint8)
+        eng.wait([eng.submit_read(o, out[o:o + 8192])
+                  for o in range(0, size, 8192)])
+        np.testing.assert_array_equal(out, data)
+        assert eng.max_queue_depth <= 4
+        assert eng.fsyncs == 1
+        assert eng.syscall_read_bytes >= size
+        assert eng.syscall_write_bytes >= size
+    finally:
+        eng.close()
+
+
+def test_engine_drain_leaves_no_inflight(tmp_path):
+    path = str(tmp_path / "d.bin")
+    eng = IOEngine(open_file(path, 1 << 16, "buffered"), queue_depth=8)
+    try:
+        buf = np.zeros(1 << 16, np.uint8)
+        for o in range(0, 1 << 16, 4096):
+            eng.submit_write(o, buf[o:o + 4096])
+        eng.drain()
+        assert eng.in_flight == 0
+        assert eng.poll() == []      # drain reaped every completion
+    finally:
+        eng.close()
+
+
+def test_engine_bounded_queue_blocks_submitter(tmp_path):
+    """The submission queue is genuinely bounded: a submit into a full queue
+    blocks (measured as queue_stall_s) until a slot frees."""
+    path = str(tmp_path / "q.bin")
+    eng = IOEngine(open_file(path, 1 << 16, "buffered"), queue_depth=2)
+    try:
+        eng._gate.clear()            # hold workers: requests stay in flight
+        buf = np.zeros(4096, np.uint8)
+        eng.submit_write(0, buf)
+        eng.submit_write(4096, buf)
+        assert eng.in_flight == 2
+
+        submitted = threading.Event()
+
+        def third():
+            eng.submit_write(8192, buf)
+            submitted.set()
+
+        t = threading.Thread(target=third)
+        t.start()
+        time.sleep(0.1)
+        assert not submitted.is_set()    # blocked on the full queue
+        eng._gate.set()
+        t.join(timeout=5)
+        assert submitted.is_set()
+        eng.drain()
+        assert eng.queue_stall_s > 0.0
+        assert eng.max_queue_depth <= 2
+    finally:
+        eng._gate.set()
+        eng.close()
+
+
+def test_engine_rw_overlap_counter(tmp_path):
+    """Deterministic both-directions-in-flight detection: with a write held
+    in flight, submitting a read records an rw-overlap event."""
+    path = str(tmp_path / "rw.bin")
+    eng = IOEngine(open_file(path, 1 << 16, "buffered"), queue_depth=4)
+    try:
+        eng._gate.clear()
+        eng.submit_write(0, np.zeros(4096, np.uint8))
+        out = np.empty(4096, np.uint8)
+        eng.submit_read(8192, out)
+        assert eng.rw_overlap_events == 1
+        eng._gate.set()
+        eng.drain()
+    finally:
+        eng._gate.set()
+        eng.close()
+
+
+def test_engine_error_propagates(tmp_path):
+    path = str(tmp_path / "err.bin")
+    eng = IOEngine(open_file(path, 1 << 16, "buffered"), queue_depth=2)
+    try:
+        eng.submit_read(-5, np.empty(4096, np.uint8))   # invalid offset
+        with pytest.raises(OSError):
+            eng.drain()
+        assert eng.in_flight == 0
+    finally:
+        eng.close()
+
+
+# --------------------------------------------------------------------------- #
+# O_DIRECT: alignment, read-modify-write, stat-level accounting               #
+# --------------------------------------------------------------------------- #
+
+def _odirect_engine(tmp_path, size):
+    path = str(tmp_path / "od.bin")
+    f = open_file(path, size, "odirect")
+    return path, f, IOEngine(f, queue_depth=4)
+
+
+def test_odirect_unaligned_rmw_preserves_neighbours(tmp_path):
+    size = 4 * ALIGN
+    path, f, eng = _odirect_engine(tmp_path, size)
+    try:
+        base = np.arange(size, dtype=np.uint32).view(np.uint8)[:size].copy()
+        eng.submit_write(0, base).wait()
+        patch = np.full(100, 0xAB, np.uint8)
+        eng.submit_write(ALIGN - 50, patch).wait()   # straddles a block edge
+        out = np.empty(size, np.uint8)
+        eng.submit_read(0, out).wait()
+        want = base.copy()
+        want[ALIGN - 50:ALIGN + 50] = patch
+        np.testing.assert_array_equal(out, want)
+        if not f.fallback:
+            # Every syscall the driver issued was whole-block.
+            assert eng.syscall_write_bytes % ALIGN == 0
+            assert eng.syscall_read_bytes % ALIGN == 0
+    finally:
+        eng.close()
+
+
+def test_odirect_concurrent_boundary_writes_serialised(tmp_path):
+    """Adjacent unaligned writes share boundary blocks; the engine must
+    serialise their read-modify-write so no update is lost."""
+    n, span = 64, 1000                      # 1000 % 4096 != 0: shared blocks
+    size = n * span
+    path, f, eng = _odirect_engine(tmp_path, size)
+    try:
+        rng = np.random.default_rng(3)
+        data = rng.integers(0, 256, size, dtype=np.uint8)
+        eng.wait([eng.submit_write(i * span, data[i * span:(i + 1) * span])
+                  for i in range(n)])
+        out = np.empty(size, np.uint8)
+        eng.submit_read(0, out).wait()
+        np.testing.assert_array_equal(out, data)
+    finally:
+        eng.close()
+
+
+def test_odirect_syscall_bytes_vs_stat(tmp_path):
+    """Satellite: the ledger's syscall-level byte counts line up with what
+    ``os.stat`` says the file occupies.  Written-once aligned file: the
+    syscall writes equal the file size exactly; on filesystems that report
+    real block allocation the allocated delta matches too (filesystems that
+    preallocate on truncate — delta 0 — are detected and the comparison
+    falls back to st_size)."""
+    size = 32 * ALIGN
+    path = str(tmp_path / "stat.bin")
+    f = open_file(path, size, "odirect")
+    blocks_before = os.stat(path).st_blocks * 512
+    eng = IOEngine(f, queue_depth=8)
+    try:
+        rng = np.random.default_rng(5)
+        data = rng.integers(0, 256, size, dtype=np.uint8)  # incompressible
+        for o in range(0, size, 4 * ALIGN):
+            eng.submit_write(o, data[o:o + 4 * ALIGN])
+        eng.fsync()
+        st = os.stat(path)
+        assert st.st_size == size
+        assert eng.syscall_write_bytes == size     # each block written once
+        if not f.fallback:
+            assert eng.syscall_write_bytes % ALIGN == 0
+        # Block-level occupancy covers every byte the ledger claims was
+        # written.  On a sparse-truncating fs the *delta* equals the write
+        # volume exactly; a preallocating fs (blocks_before > 0) already
+        # charged the blocks at truncate, so occupancy is the comparison.
+        allocated = st.st_blocks * 512
+        assert allocated >= size
+        if blocks_before == 0:
+            assert allocated - blocks_before >= eng.syscall_write_bytes
+    finally:
+        eng.close()
+
+
+def test_odirect_fallback_is_documented(tmp_path):
+    """Where the fs refuses O_DIRECT the driver must warn and keep working
+    (buffered); where it accepts, no warning.  Either way the bytes land."""
+    import warnings
+    path = str(tmp_path / "fb.bin")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        f = open_file(path, ALIGN, "odirect")
+    if f.fallback:
+        assert any("O_DIRECT" in str(w.message) for w in caught)
+        assert f.align == 1
+    else:
+        assert not any("O_DIRECT" in str(w.message) for w in caught)
+        assert f.align == ALIGN
+    eng = IOEngine(f, queue_depth=1)
+    try:
+        eng.submit_write(0, np.full(ALIGN, 7, np.uint8)).wait()
+        out = np.empty(ALIGN, np.uint8)
+        eng.submit_read(0, out).wait()
+        assert (out == 7).all()
+    finally:
+        eng.close()
+
+
+# --------------------------------------------------------------------------- #
+# Backing files: create-or-reuse, flush-then-reopen round-trips               #
+# --------------------------------------------------------------------------- #
+
+def test_memmap_backing_reopen_preserves_contents(tmp_path):
+    """Regression: MemmapBacking used to open caller paths with "wb" and
+    truncate — a resume against a populated backing file was silently
+    zeroed."""
+    path = str(tmp_path / "ctx.bin")
+    v, words = 4, 16
+    b1 = MemmapBacking(v, words, path)
+    b1.arr[:] = np.arange(v * words, dtype=np.uint32).reshape(v, words)
+    b1.flush()
+    del b1
+    b2 = MemmapBacking(v, words, path)
+    np.testing.assert_array_equal(
+        b2.arr, np.arange(v * words, dtype=np.uint32).reshape(v, words))
+    # Too-small file is extended, not truncated: old bytes survive.
+    b3 = MemmapBacking(v + 2, words, path)
+    np.testing.assert_array_equal(
+        b3.arr[:v], np.arange(v * words, dtype=np.uint32).reshape(v, words))
+    assert (b3.arr[v:] == 0).all()
+
+
+@pytest.mark.parametrize("io_driver", IO_DRIVERS)
+def test_file_backing_reopen_preserves_contents(tmp_path, io_driver):
+    path = str(tmp_path / "ctx.bin")
+    v, words = 4, 16
+    b1 = FileBacking(v, words, path, io_driver=io_driver)
+    want = np.arange(v * words, dtype=np.uint32).reshape(v, words)
+    b1.write_block(0, v, want)
+    b1.flush()
+    b1.close()
+    b2 = FileBacking(v, words, path, io_driver=io_driver)
+    np.testing.assert_array_equal(b2.read_block(0, v), want)
+    b2.close()
+
+
+@pytest.mark.parametrize("tier", ("memmap", "file"))
+def test_flush_reopen_round_trip_through_store(tmp_path, tier):
+    """Crash consistency: flush() then reopen on a fresh executor sees the
+    exact bytes (the backing file is the single source of truth)."""
+    path = str(tmp_path / "store.bin")
+    lo = ContextLayout().add("x", (8,), jnp.int32)
+    v = 4
+    rng = np.random.default_rng(9)
+    want = rng.integers(-1000, 1000, (v, 8)).astype(np.int32)
+
+    pems1 = Pems(PemsConfig(v=v, k=2, tier=tier, backing_path=path), lo)
+    st1 = pems1.init().with_field("x", want)
+    st1.flush()
+    if tier == "file":
+        assert st1.backing.engine.in_flight == 0
+        st1.backing.close()
+
+    lo2 = ContextLayout().add("x", (8,), jnp.int32)
+    pems2 = Pems(PemsConfig(v=v, k=2, tier=tier, backing_path=path), lo2)
+    st2 = pems2.init()
+    np.testing.assert_array_equal(np.asarray(st2.field("x")), want)
+
+
+# --------------------------------------------------------------------------- #
+# Config validation                                                            #
+# --------------------------------------------------------------------------- #
+
+def test_config_validates_tier_and_io_knobs_at_construction():
+    lo = ContextLayout().add("x", (4,), jnp.int32)
+    with pytest.raises(ValueError, match="unknown tier"):
+        PemsConfig(v=4, k=2, tier="ssd")
+    with pytest.raises(ValueError, match="unknown io_driver"):
+        PemsConfig(v=4, k=2, tier="file", io_driver="uring")
+    with pytest.raises(ValueError, match="requires tier='file'"):
+        PemsConfig(v=4, k=2, tier="memmap", io_driver="odirect")
+    with pytest.raises(ValueError, match="io_queue_depth"):
+        PemsConfig(v=4, k=2, tier="file", io_queue_depth=0)
+    # The init-time tier override is validated as early as the config's.
+    pems = Pems(PemsConfig(v=4, k=2), lo)
+    with pytest.raises(ValueError, match="unknown tier"):
+        pems.init(tier="ssd")
+    # Defaults resolve: file tier without io_driver means buffered.
+    assert PemsConfig(v=4, k=2, tier="file").io_driver == "buffered"
+    assert PemsConfig(v=4, k=2).io_driver is None
+
+
+# --------------------------------------------------------------------------- #
+# Ledger: requested vs syscall bytes on the file tier                          #
+# --------------------------------------------------------------------------- #
+
+def test_file_tier_ledger_counts_live_bytes(tmp_path):
+    """The file tier self-accounts exactly like memmap: disk bytes = the
+    live words each round touches; the syscall counters sit on top (equal
+    for buffered, block-inflated for odirect)."""
+    v, k, capacity = 8, 2, 64
+    lo = (ContextLayout(capacity_words=capacity)
+          .add("a", (8,), jnp.int32)
+          .add("tmp", (16,), jnp.int32)
+          .add("b", (8,), jnp.int32))
+    lo.drop("tmp")                      # live hole: runs split around it
+    path = str(tmp_path / "ctx.bin")
+    pems = Pems(PemsConfig(v=v, k=k, tier="file", backing_path=path,
+                           io_driver="buffered"), lo)
+    store = pems.init()
+    store = pems.superstep(
+        store, lambda rho, c: c.set("a", c.get("a") + 1).set("b", c.get("b")))
+    live_bytes = lo.live_words * WORD
+    led = pems.ledger
+    assert led.h2d_bytes == v * live_bytes
+    assert led.d2h_bytes == v * live_bytes
+    assert led.disk_read_bytes == v * live_bytes
+    assert led.disk_write_bytes == v * live_bytes
+    # Buffered pread/pwrite ask the kernel for exactly the requested bytes.
+    assert led.syscall_read_bytes == led.disk_read_bytes
+    assert led.syscall_write_bytes == led.disk_write_bytes
+    assert pems.backing.engine.in_flight == 0
+    assert os.stat(path).st_size >= v * capacity * WORD
+
+
+def test_file_tier_async_drains_before_return(tmp_path):
+    """After an async-driver superstep returns, no writeback may still be in
+    flight (drain() guarantee) — a flush+reopen must see the final bytes."""
+    rng = np.random.default_rng(1)
+    data = rng.integers(-1000, 1000, size=4096, dtype=np.int32)
+    out, pems = psrs_sort(data, v=8, k=2, driver="async", tier="file",
+                          io_driver="buffered", return_pems=True)
+    np.testing.assert_array_equal(out, np.sort(data))
+    assert pems.backing.engine.in_flight == 0
+    s = pems.tier_stats
+    assert s.rounds > 0 and s.swap_in_s > 0
+    assert s.max_queue_depth >= 1
+    assert 0.0 <= s.overlap_fraction <= 1.0
+    d = s.as_dict()
+    assert set(d) >= {"max_queue_depth", "queue_stall_s", "fsyncs",
+                      "rw_overlap_events"}
+
+
+def test_file_backing_narrow_columns_odirect(tmp_path):
+    """Sub-block rows with narrow column selections take the whole-row RMW
+    cutover on aligned drivers: bytes still land exactly, including under
+    fire-and-forget writes drained later."""
+    v, words = 16, 8                    # rowbytes = 32 << ALIGN
+    b = FileBacking(v, words, str(tmp_path / "n.bin"), io_driver="odirect")
+    try:
+        base = np.arange(v * words, dtype=np.uint32).reshape(v, words)
+        b.write_block(0, v, base)
+        cols = np.array([1, 2, 5])      # two runs per row
+        patch = np.full((v, 3), 9999, np.uint32)
+        b.write_block(0, v, patch, cols=cols, wait=False)
+        b.drain()
+        want = base.copy()
+        want[:, cols] = patch
+        np.testing.assert_array_equal(b.read_block(0, v), want)
+        np.testing.assert_array_equal(b.read_block(0, v, cols=cols), patch)
+    finally:
+        b.close()
+
+
+def test_checkpoint_noncontiguous_memmap_leaf(tmp_path):
+    """A strided memmap leaf must stream (plain-copy fallback) instead of
+    crashing the engine path — and a blocking save must surface nothing."""
+    from repro.checkpoint.manager import CheckpointManager
+    mm = np.memmap(str(tmp_path / "m.bin"), dtype=np.int32, mode="w+",
+                   shape=(8, 8))
+    mm[:] = np.arange(64, dtype=np.int32).reshape(8, 8)
+    view = mm[:, ::2]                   # non-contiguous, still np.memmap
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=1)
+    mgr.save(1, {"s": view}, blocking=True)
+    mm2 = np.memmap(str(tmp_path / "m2.bin"), dtype=np.int32, mode="w+",
+                    shape=(8, 8))
+    got = mgr.restore_latest(like={"s": mm2[:, ::2]})
+    assert got is not None and got[0] == 1
+    np.testing.assert_array_equal(np.asarray(got[1]["s"]),
+                                  np.asarray(view))
+
+
+# --------------------------------------------------------------------------- #
+# PSRS bit-identity: io-driver × executor-driver vs the device reference       #
+# (subprocess so the file-tier runs cannot share any jit/global state with     #
+# the in-process reference)                                                    #
+# --------------------------------------------------------------------------- #
+
+_FILE_TIER_PSRS = textwrap.dedent("""
+    import numpy as np
+    from repro.pems_apps import psrs_sort
+
+    rng = np.random.default_rng(11)
+    n, v, k = 2048, 8, 2
+    data = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+    ref = psrs_sort(data, v=v, k=k)          # tier="device" reference
+    np.testing.assert_array_equal(ref, np.sort(data))
+
+    for io_driver in ("buffered", "odirect", "mmap"):
+        for driver in ("explicit", "sliced", "async"):
+            out = psrs_sort(data, v=v, k=k, driver=driver, tier="file",
+                            io_driver=io_driver, io_queue_depth=4)
+            np.testing.assert_array_equal(out, ref)
+    print("FILE_TIER_PSRS_OK")
+""")
+
+
+def test_psrs_file_tier_bit_identity_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", _FILE_TIER_PSRS],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert "FILE_TIER_PSRS_OK" in r.stdout, r.stderr[-3000:]
