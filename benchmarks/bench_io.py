@@ -86,12 +86,13 @@ def _engine_row(td: str, driver: str, queue_depth: int, block_bytes: int,
 
 
 def _psrs_row(td: str, driver: str, exec_driver: str, keys, v: int, k: int,
-              queue_depth: int, want) -> dict:
+              queue_depth: int, want, checksums: bool = False) -> dict:
+    tag = f"psrs_{driver}_{exec_driver}{'_crc' if checksums else ''}.bin"
     t0 = time.perf_counter()
     out, pems = psrs_sort(
         keys, v=v, k=k, driver=exec_driver, tier="file", io_driver=driver,
-        io_queue_depth=queue_depth,
-        backing_path=os.path.join(td, f"psrs_{driver}_{exec_driver}.bin"),
+        io_queue_depth=queue_depth, checksums=checksums,
+        backing_path=os.path.join(td, tag),
         return_pems=True,
     )
     wall_s = time.perf_counter() - t0
@@ -102,6 +103,7 @@ def _psrs_row(td: str, driver: str, exec_driver: str, keys, v: int, k: int,
     return {
         "io_driver": driver,
         "exec_driver": exec_driver,
+        "checksum": checksums,
         "fallback": fallback,
         "n": int(np.asarray(keys).size),
         "v": v,
@@ -163,6 +165,27 @@ def run(smoke: bool | None = None) -> None:
                      f"overlap={row['overlap_fraction']};"
                      f"rw_overlap={row['rw_overlap_events']}")
 
+        # Integrity cost: a checksum-on row measured *paired* against a
+        # checksum-off twin — interleaved, min-of-2 per side, so jit and
+        # page-cache noise cancels and the regression gate can hold the
+        # per-block CRC sidecar's overhead to a tight bound.
+        offs, ons, row = [], [], None
+        for rep in range(2):
+            offs.append(_psrs_row(td, driver="buffered",
+                                  exec_driver="async", keys=keys, v=v, k=k,
+                                  queue_depth=qd, want=want)["wall_s"])
+            row = _psrs_row(td, driver="buffered", exec_driver="async",
+                            keys=keys, v=v, k=k, queue_depth=qd, want=want,
+                            checksums=True)
+            ons.append(row["wall_s"])
+        row["wall_s"] = min(ons)
+        row["wall_plain_s"] = min(offs)
+        row["checksum_overhead"] = round(min(ons) / min(offs) - 1, 4)
+        psrs_rows.append(row)
+        emit("io_psrs_buffered_async_crc", row["wall_s"] * 1e6,
+             f"overhead={row['checksum_overhead']};"
+             f"overlap={row['overlap_fraction']}")
+
     out = {
         "benchmark": "io_engine",
         "backend": jax.default_backend(),
@@ -173,7 +196,10 @@ def run(smoke: bool | None = None) -> None:
                  "tier='file'; overlap_fraction = 1 - stall_s/swap_in_s; "
                  "rw_overlap_events > 0 on the async rows means swap-in "
                  "reads and writeback writes were simultaneously in flight "
-                 "(both directions, §5.1)."),
+                 "(both directions, §5.1).  checksum=true rows run the same "
+                 "sort with the per-block CRC sidecar on; their wall_s vs "
+                 "the checksum=false twin is the integrity overhead the "
+                 "gate bounds."),
         "engine": engine_rows,
         "psrs": psrs_rows,
     }

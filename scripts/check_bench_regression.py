@@ -16,7 +16,10 @@ Two schemas, dispatched on the files' ``benchmark`` field:
   ``odirect`` rows are *skipped with a notice* when the two runs disagree on
   the O_DIRECT fallback (a CI filesystem without O_DIRECT must take the
   documented buffered fallback, not fail the gate) — but missing rows still
-  fail, so a crashed sweep cannot read as green.
+  fail, so a crashed sweep cannot read as green.  ``checksum=true`` rows are
+  additionally held to ``--checksum-overhead`` (default 15%) wall-time
+  overhead against their checksum-off twin *within the new run*, bounding
+  the cost of the per-block CRC sidecar.
 
 A machine-class guard skips the comparison (exit 0 with a notice) when the
 two files disagree on backend or sweep shape — a CPU baseline says nothing
@@ -40,9 +43,13 @@ def load(path: str) -> dict:
         return json.load(f)
 
 
-def check_io(base: dict, new: dict, overlap_slack: float) -> int:
-    base_rows = {(r["io_driver"], r["exec_driver"]): r for r in base["psrs"]}
-    new_rows = {(r["io_driver"], r["exec_driver"]): r for r in new["psrs"]}
+def check_io(base: dict, new: dict, overlap_slack: float,
+             checksum_overhead: float) -> int:
+    def key(r):
+        return (r["io_driver"], r["exec_driver"], r.get("checksum", False))
+
+    base_rows = {key(r): r for r in base["psrs"]}
+    new_rows = {key(r): r for r in new["psrs"]}
     missing = sorted(set(base_rows) - set(new_rows))
     if missing:
         print(f"FAIL: baseline psrs rows missing from the new run: {missing}")
@@ -82,6 +89,30 @@ def check_io(base: dict, new: dict, overlap_slack: float) -> int:
         print(f"FAIL: async overlap collapsed by more than {overlap_slack} "
               f"vs the committed baseline on rows {failures}")
         return 1
+
+    # Integrity-cost gate: each checksum-on row is compared *within the new
+    # run* against its checksum-off twin (same io/exec driver), so machine
+    # speed cancels; the sidecar must stay cheap.
+    crc_failures = []
+    for k in sorted(k for k in new_rows if k[2]):
+        r = new_rows[k]
+        if "checksum_overhead" in r:        # paired min-of-2 from the bench
+            over = r["checksum_overhead"]
+        else:
+            twin = new_rows.get((k[0], k[1], False))
+            if twin is None:
+                continue
+            over = r["wall_s"] / twin["wall_s"] - 1.0
+        status = "ok" if over <= checksum_overhead else "REGRESSED"
+        print(f"io={k[0]:9s} exec={k[1]:9s}: checksum overhead "
+              f"{over * 100:+.1f}% (limit {checksum_overhead * 100:.0f}%) "
+              f"[{status}]")
+        if status != "ok":
+            crc_failures.append(k)
+    if crc_failures:
+        print(f"FAIL: per-block checksum overhead exceeded "
+              f"{checksum_overhead * 100:.0f}% on rows {crc_failures}")
+        return 1
     print(f"OK: io-engine overlap within {overlap_slack} of the committed "
           f"baseline on all compared rows")
     return 0
@@ -96,6 +127,10 @@ def main() -> int:
     ap.add_argument("--overlap-slack", type=float, default=0.35,
                     help="io_engine gate: max allowed absolute drop in "
                          "overlap_fraction vs baseline")
+    ap.add_argument("--checksum-overhead", type=float, default=0.15,
+                    help="io_engine gate: max allowed wall-time overhead of "
+                         "a checksum-on psrs row vs its checksum-off twin "
+                         "(within the new run, so machine speed cancels)")
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -114,7 +149,8 @@ def main() -> int:
             return 0
 
     if base.get("benchmark") == "io_engine":
-        return check_io(base, new, args.overlap_slack)
+        return check_io(base, new, args.overlap_slack,
+                        args.checksum_overhead)
 
     # P defaults to 1 so pre-mesh baselines keep matching.
     base_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c

@@ -26,6 +26,14 @@ Designed for the preemption model of large TPU fleets:
   adapter), so several chunks are in flight at once instead of one
   synchronous ``dst[i:j] = src[i:j]`` at a time — the same engine the
   ``tier="file"`` backing store swaps through.
+* **Checksummed chunks**: every array is CRC'd per streaming chunk at save
+  time and the CRCs live in the manifest (version 2); restore verifies each
+  chunk, so a corrupted shard is an ``IOError`` (and ``restore_latest``
+  falls back to an older checkpoint) instead of silently-wrong state.  The
+  manifest itself is written temp + fsync + rename inside the staging dir,
+  and both the staging dir and the checkpoint dir are fsync'd around the
+  final rename — a crash at any instant leaves the previous checkpoint
+  untouched and loadable.
 """
 
 from __future__ import annotations
@@ -41,6 +49,8 @@ import jax
 import numpy as np
 
 from repro.io import IOEngine, MmapFile
+from repro.io.checksum import CHECKSUM_ALGO, crc_bytes
+from repro.core.recovery import fsync_dir
 
 
 class CheckpointManager:
@@ -75,8 +85,9 @@ class CheckpointManager:
                 path = os.path.join(tmp, fn)
                 is_mm = isinstance(arr, np.memmap)
                 if is_mm:
-                    _stream_to_npy(arr, path)
+                    crcs = _stream_to_npy(arr, path)
                 else:
+                    crcs = _array_crcs(arr)
                     with open(path, "wb") as f:
                         np.save(f, arr)
                         f.flush()
@@ -84,17 +95,26 @@ class CheckpointManager:
                 names.append({"key": key, "file": fn,
                               "shape": list(arr.shape),
                               "dtype": str(arr.dtype),
-                              "memmap": is_mm})
+                              "memmap": is_mm,
+                              "chunk_crcs": crcs})
             manifest = {"step": step, "arrays": names,
-                        "time": time.time(), "version": 1}
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                        "time": time.time(), "version": 2,
+                        "algo": CHECKSUM_ALGO}
+            # The manifest is the commit record within the staging dir:
+            # write it temp + fsync + rename so even a crash *during* the
+            # final directory rename below can't expose a torn manifest.
+            mpath = os.path.join(tmp, "manifest.json")
+            with open(mpath + ".tmp", "w") as f:
                 json.dump(manifest, f)
                 f.flush()
                 os.fsync(f.fileno())
+            os.replace(mpath + ".tmp", mpath)
+            fsync_dir(tmp)
             if os.path.exists(final):
                 shutil.rmtree(tmp)       # another writer won the race
             else:
                 os.replace(tmp, final)   # atomic commit
+                fsync_dir(self.dir)      # persist the rename itself
             self._gc()
 
         if blocking:
@@ -132,12 +152,17 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         metas = manifest["arrays"]
+        # Version-2 manifests carry per-chunk CRCs; verify when the recorded
+        # algorithm matches ours.  Version-1 (or cross-algo) checkpoints are
+        # tolerated without verification.
+        verify = manifest.get("algo") == CHECKSUM_ALGO
         if like is None:
             arrays = []
             for meta in metas:
                 arr = np.load(os.path.join(d, meta["file"]))
                 if list(arr.shape) != meta["shape"]:
                     raise IOError(f"shape mismatch in {meta['file']}")
+                self._verify(arr, meta, verify)
                 arrays.append(arr)
             return arrays
         flat, treedef = jax.tree_util.tree_flatten(like)
@@ -159,16 +184,31 @@ class CheckpointManager:
                         f"memmap leaf mismatch in {meta['file']}: checkpoint "
                         f"{src.shape}/{src.dtype} vs store "
                         f"{leaf.shape}/{leaf.dtype}")
-                _chunked_copy(src, leaf)
+                _chunked_copy(src, leaf,
+                              crcs_expect=(meta.get("chunk_crcs")
+                                           if verify else None),
+                              label=meta["file"])
                 leaf.flush()
                 arrays.append(leaf)
                 continue
             arr = np.load(path)
             if list(arr.shape) != meta["shape"]:
                 raise IOError(f"shape mismatch in {meta['file']}")
+            self._verify(arr, meta, verify)
             arrays.append(jax.device_put(arr) if sh is None
                           else jax.device_put(arr, sh))
         return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    @staticmethod
+    def _verify(arr: np.ndarray, meta: dict, verify: bool) -> None:
+        crcs = meta.get("chunk_crcs")
+        if not verify or crcs is None:
+            return
+        got = _array_crcs(arr)
+        if got != crcs:
+            ci = next((i for i, (a, b) in enumerate(zip(got, crcs))
+                       if a != b), min(len(got), len(crcs)))
+            raise _crc_mismatch(meta["file"], ci)
 
     def _steps(self) -> List[int]:
         out = []
@@ -202,48 +242,104 @@ _STREAM_CHUNK_BYTES = 64 << 20   # bound on resident bytes while streaming
 _STREAM_QUEUE_DEPTH = 4          # chunks in flight on the engine
 
 
-def _chunked_copy(src, dst) -> None:
+def _chunk_rows(shape, itemsize: int) -> Tuple[int, int]:
+    """(row bytes, rows per streaming chunk) for an array of ``shape``."""
+    row = max(1, int(np.prod(shape[1:], dtype=np.int64))) * itemsize
+    return row, max(1, _STREAM_CHUNK_BYTES // (row * _STREAM_QUEUE_DEPTH))
+
+
+def _chunk_crc(chunk: np.ndarray) -> int:
+    return crc_bytes(np.ascontiguousarray(chunk).reshape(-1).view(np.uint8))
+
+
+def _array_crcs(arr: np.ndarray) -> List[int]:
+    """Per-chunk CRCs of ``arr`` using the streaming chunk geometry (so the
+    save and restore sides agree without storing the chunk size)."""
+    a = np.asarray(arr)
+    if a.ndim == 0:
+        return [crc_bytes(a.tobytes())]
+    _, step = _chunk_rows(a.shape, a.itemsize)
+    return [_chunk_crc(a[i:i + step]) for i in range(0, a.shape[0], step)]
+
+
+def _crc_mismatch(path: str, ci: int) -> IOError:
+    return IOError(
+        f"checksum mismatch in {path} (chunk {ci}): the checkpoint shard is "
+        f"torn or corrupt; restore_latest will fall back to an older step")
+
+
+def _chunked_copy(src, dst, crcs_out: Optional[List[int]] = None,
+                  crcs_expect: Optional[List[int]] = None,
+                  label: str = "<array>") -> None:
     """Copy array ``src`` into ``dst`` in ≤ 64 MiB chunks along axis 0
     (whole-array for 0-d), keeping the resident footprint bounded.
 
     When ``dst`` is an ``np.memmap`` the chunks are submitted through a
-    :class:`repro.io.IOEngine` over the mmap adapter: each worker pages in
-    its (lazy) ``src`` chunk and stores it, so up to ``_STREAM_QUEUE_DEPTH``
-    chunk copies overlap instead of serialising on one thread.  The resident
-    bound becomes chunk × queue-depth.
+    :class:`repro.io.IOEngine` over the mmap adapter, so up to
+    ``_STREAM_QUEUE_DEPTH`` chunk copies overlap instead of serialising on
+    one thread.  The resident bound becomes chunk × queue-depth.
+
+    ``crcs_out`` (save path) collects a CRC per chunk, computed in the
+    submitting thread — the manifest records what was *sent*, so a write the
+    OS tears is detectable.  ``crcs_expect`` (restore path) verifies each
+    chunk of ``src`` before it is copied, raising :class:`IOError` on
+    mismatch — corrupt checkpoint bytes are rejected instead of streamed
+    into the live store.
     """
+    checking = crcs_out is not None or crcs_expect is not None
     if src.ndim == 0:
+        if checking:
+            crc = crc_bytes(np.asarray(src).tobytes())
+            if crcs_out is not None:
+                crcs_out.append(crc)
+            if crcs_expect is not None and crc != crcs_expect[0]:
+                raise _crc_mismatch(label, 0)
         dst[...] = src
         return
-    row = max(1, int(np.prod(src.shape[1:], dtype=np.int64))) * src.itemsize
-    step = max(1, _STREAM_CHUNK_BYTES // (row * _STREAM_QUEUE_DEPTH))
+    row, step = _chunk_rows(src.shape, src.itemsize)
+
+    def check(chunk, ci):
+        if not checking:
+            return chunk
+        chunk = np.ascontiguousarray(chunk)
+        crc = _chunk_crc(chunk)
+        if crcs_out is not None:
+            crcs_out.append(crc)
+        if crcs_expect is not None and (
+                ci >= len(crcs_expect) or crc != crcs_expect[ci]):
+            raise _crc_mismatch(label, ci)
+        return chunk
+
     if (not isinstance(dst, np.memmap) or not dst.flags.c_contiguous
             or not src.flags.c_contiguous):
         # Strided/F-order leaves: the engine needs C-contiguous chunk
         # buffers (memoryview cast) and a flat byte view of dst — numpy
         # assignment handles these layouts instead.
-        for i in range(0, src.shape[0], step):
-            dst[i:i + step] = src[i:i + step]
+        for ci, i in enumerate(range(0, src.shape[0], step)):
+            dst[i:i + step] = check(src[i:i + step], ci)
         return
     flat = dst.reshape(-1).view(np.uint8)
     engine = IOEngine(MmapFile(mm=flat), queue_depth=_STREAM_QUEUE_DEPTH)
     try:
-        for i in range(0, src.shape[0], step):
-            engine.submit_write(i * row, src[i:i + step], auto_reap=True)
+        for ci, i in enumerate(range(0, src.shape[0], step)):
+            engine.submit_write(i * row, check(src[i:i + step], ci),
+                                auto_reap=True)
         engine.drain()
     finally:
         engine.close()
 
 
-def _stream_to_npy(arr: np.memmap, path: str) -> None:
+def _stream_to_npy(arr: np.memmap, path: str) -> List[int]:
     """Write a memmap to ``.npy`` by chunked copy (no full-RAM staging),
-    fsync'd like the regular save path."""
+    fsync'd like the regular save path.  Returns the per-chunk CRCs."""
+    crcs: List[int] = []
     out = np.lib.format.open_memmap(path, mode="w+", dtype=arr.dtype,
                                     shape=arr.shape)
     try:
-        _chunked_copy(arr, out)
+        _chunked_copy(arr, out, crcs_out=crcs)
         out.flush()
     finally:
         del out
     with open(path, "rb+") as f:
         os.fsync(f.fileno())
+    return crcs

@@ -29,6 +29,7 @@ from .context import (
 )
 from .executor import DRIVERS, Pems, PemsConfig
 from .iostats import IOLedger, TierStats
+from .recovery import SuperstepCursor, atomic_write_json
 
 __all__ = [
     "Allocator",
@@ -43,11 +44,13 @@ __all__ = [
     "MemmapBacking",
     "Pems",
     "PemsConfig",
+    "SuperstepCursor",
     "TIERS",
     "TieredStore",
     "TierStats",
     "WORD",
     "analysis",
+    "atomic_write_json",
     "init_store",
     "layout",
     "make_backing",

@@ -34,6 +34,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.io import IOEngine, ensure_file_size, open_file
+from repro.io.checksum import ChecksumSidecar, span_plan
 
 from .context import ContextLayout, WORD
 
@@ -75,6 +76,7 @@ class _ArrayBacking:
     """Shared block API for backings that expose a ``[v, words]`` ndarray."""
 
     arr: np.ndarray
+    checksum: Optional[ChecksumSidecar] = None
 
     def read_block(self, r0: int, r1: int, cols=None) -> np.ndarray:
         """Rows ``[r0, r1)`` with the selected columns, as a contiguous
@@ -135,7 +137,8 @@ class MemmapBacking(_ArrayBacking):
     tier = "memmap"
     disk = True
 
-    def __init__(self, v: int, words: int, path: Optional[str] = None):
+    def __init__(self, v: int, words: int, path: Optional[str] = None,
+                 checksum: bool = False):
         owns = path is None
         if path is None:
             fd, path = tempfile.mkstemp(prefix="pems_ctx_", suffix=".bin")
@@ -143,11 +146,22 @@ class MemmapBacking(_ArrayBacking):
         self.path = path
         self.v = v
         self.words = words
+        self.rowbytes = words * WORD
+        existed = os.path.exists(path) and os.path.getsize(path) > 0
         ensure_file_size(path, v * words * WORD)   # sparse; never truncates
         self.arr = np.memmap(path, dtype=np.uint32, mode="r+",
                              shape=(v, words))
+        self.checksum = None
+        if checksum:
+            self.checksum = ChecksumSidecar(path, v, self.rowbytes)
+            if self.checksum.fresh:
+                if existed:        # adopt pre-existing data as-is
+                    self.recompute_checksums()
+                else:              # fresh sparse file reads as zeros
+                    self.checksum.seed_zero()
         if owns:
             self._finalizer = weakref.finalize(self, _unlink_quiet, path)
+            weakref.finalize(self, _unlink_quiet, path + ".crc")
 
     @property
     def nbytes(self) -> int:
@@ -155,6 +169,60 @@ class MemmapBacking(_ArrayBacking):
 
     def flush(self) -> None:
         self.arr.flush()
+        if self.checksum is not None:
+            self.checksum.flush()
+
+    # -------------------------------------------------------------- integrity
+    def _rows_u8(self) -> np.ndarray:
+        return self.arr.view(np.uint8)
+
+    def _spans(self, cols):
+        cs = self.checksum
+        if cols is None:
+            return [(0, cs.nseg - 1, [])]
+        runs, _ = _cols_runs(cols, self.words)
+        ranges = [(w0 * WORD, (w0 + nw) * WORD) for _, w0, nw in runs]
+        return span_plan(ranges, cs.chk, self.rowbytes)
+
+    def read_block(self, r0: int, r1: int, cols=None) -> np.ndarray:
+        if self.checksum is not None:
+            cs, rb = self.checksum, self._rows_u8()
+            for s0, s1, _ in self._spans(cols):
+                b0 = s0 * cs.chk
+                b1 = min(self.rowbytes, (s1 + 1) * cs.chk)
+                for i in range(r0, r1):
+                    cs.verify_span(i, s0, rb[i, b0:b1])
+        return super().read_block(r0, r1, cols)
+
+    def write_block(self, r0: int, r1: int, value, cols=None,
+                    wait: bool = True) -> None:
+        if self.checksum is None:
+            return super().write_block(r0, r1, value, cols, wait)
+        cs, rb = self.checksum, self._rows_u8()
+        spans = self._spans(cols)
+        # Verify partially-covered boundary segments *before* folding them
+        # into fresh checksums — a torn block must never be blessed.
+        for s0, s1, partial in spans:
+            for s in partial:
+                b0, b1 = cs.seg_bounds(s)
+                for i in range(r0, r1):
+                    cs.verify_span(i, s, rb[i, b0:b1])
+        super().write_block(r0, r1, value, cols, wait)
+        for s0, s1, _ in spans:
+            b0 = s0 * cs.chk
+            b1 = min(self.rowbytes, (s1 + 1) * cs.chk)
+            for i in range(r0, r1):
+                cs.set_span(i, s0, rb[i, b0:b1])
+
+    def recompute_checksums(self) -> None:
+        """Re-bless every row's CRCs from the bytes on disk (recovery: after
+        a crash the sidecar may record intended-but-torn writes for rows the
+        resume is about to regenerate anyway)."""
+        if self.checksum is None:
+            return
+        self.checksum.set_rows(0, self._rows_u8())
+        self.checksum.flush()
+        self.checksum.fresh = False
 
 
 class FileBacking:
@@ -182,7 +250,9 @@ class FileBacking:
 
     def __init__(self, v: int, words: int, path: Optional[str] = None,
                  io_driver: str = "buffered", io_queue_depth: int = 8,
-                 stats=None, ledger=None):
+                 stats=None, ledger=None, checksum: bool = False,
+                 fault_spec: Optional[str] = None, io_retries: int = 2,
+                 io_backoff_s: float = 0.002):
         owns = path is None
         if path is None:
             fd, path = tempfile.mkstemp(prefix="pems_ctx_", suffix=".bin")
@@ -192,9 +262,20 @@ class FileBacking:
         self.words = words
         self.rowbytes = words * WORD
         self.io_driver = io_driver
-        self.file = open_file(path, v * words * WORD, io_driver)
+        existed = os.path.exists(path) and os.path.getsize(path) > 0
+        self.file = open_file(path, v * words * WORD, io_driver,
+                              fault_spec=fault_spec)
         self.engine = IOEngine(self.file, queue_depth=io_queue_depth,
-                               stats=stats, ledger=ledger)
+                               stats=stats, ledger=ledger,
+                               retries=io_retries, backoff_s=io_backoff_s)
+        self.checksum = None
+        if checksum:
+            self.checksum = ChecksumSidecar(path, v, self.rowbytes)
+            if self.checksum.fresh:
+                if existed:        # adopt pre-existing data as-is
+                    self.recompute_checksums()
+                else:              # fresh sparse file reads as zeros
+                    self.checksum.seed_zero()
         self._finalizer = weakref.finalize(
             self, _close_quiet, self.engine, path if owns else None)
 
@@ -216,28 +297,71 @@ class FileBacking:
         runs, n = _cols_runs(cols, self.words)
         rows = r1 - r0
         if cols is not None and self._whole_rows_cheaper(runs):
-            whole = self.read_block(r0, r1, None)
+            whole = self.read_block(r0, r1, None)     # verified if checksummed
             out = np.empty((rows, n), np.uint32)
             for j, w0, nw in runs:
                 out[:, j:j + nw] = whole[:, w0:w0 + nw]
             return out
+        if cols is None:
+            out = self._read_rows(r0, r1)
+            if self.checksum is not None:
+                self.checksum.verify_rows(r0, out.view(np.uint8))
+            return out
+        if self.checksum is not None:
+            return self._read_cols_checksummed(r0, r1, runs, n)
         out = np.empty((rows, n), np.uint32)
         reqs = []
-        if cols is None:
-            flat = out.reshape(-1).view(np.uint8)
-            base = r0 * self.rowbytes
-            total = rows * self.rowbytes
-            for o in range(0, total, self.chunk_bytes):
-                nb = min(self.chunk_bytes, total - o)
-                reqs.append(self.engine.submit_read(base + o,
-                                                    flat[o:o + nb]))
-        else:
-            for i in range(rows):
-                base = (r0 + i) * self.rowbytes
-                for j, w0, nw in runs:
-                    reqs.append(self.engine.submit_read(
-                        base + w0 * WORD, out[i, j:j + nw].view(np.uint8)))
+        for i in range(rows):
+            base = (r0 + i) * self.rowbytes
+            for j, w0, nw in runs:
+                reqs.append(self.engine.submit_read(
+                    base + w0 * WORD, out[i, j:j + nw].view(np.uint8)))
         self.engine.wait(reqs)
+        return out
+
+    def _read_rows(self, r0: int, r1: int) -> np.ndarray:
+        """Whole rows ``[r0, r1)`` as chunked engine reads — no verification
+        (``read_block`` verifies; ``recompute_checksums`` must not)."""
+        rows = r1 - r0
+        out = np.empty((rows, self.words), np.uint32)
+        flat = out.reshape(-1).view(np.uint8)
+        base = r0 * self.rowbytes
+        total = rows * self.rowbytes
+        reqs = []
+        for o in range(0, total, self.chunk_bytes):
+            nb = min(self.chunk_bytes, total - o)
+            reqs.append(self.engine.submit_read(base + o, flat[o:o + nb]))
+        self.engine.wait(reqs)
+        return out
+
+    def _read_cols_checksummed(self, r0: int, r1: int, runs, n) -> np.ndarray:
+        """Column-run reads widened to checksum-segment boundaries so every
+        returned byte is covered by a verified segment."""
+        cs = self.checksum
+        rows = r1 - r0
+        out = np.empty((rows, n), np.uint32)
+        ranges = [(w0 * WORD, (w0 + nw) * WORD) for _, w0, nw in runs]
+        spans = span_plan(ranges, cs.chk, self.rowbytes)
+        reqs, bufs = [], []
+        for i in range(rows):
+            base = (r0 + i) * self.rowbytes
+            for s0, s1, _ in spans:
+                b0 = s0 * cs.chk
+                b1 = min(self.rowbytes, (s1 + 1) * cs.chk)
+                scr = np.empty(b1 - b0, np.uint8)
+                reqs.append(self.engine.submit_read(base + b0, scr))
+                bufs.append((i, s0, b0, scr))
+        self.engine.wait(reqs)
+        for i, s0, b0, scr in bufs:
+            cs.verify_span(r0 + i, s0, scr)
+            hi = b0 + len(scr)
+            for j, w0, nw in runs:
+                rb0, rb1 = w0 * WORD, (w0 + nw) * WORD
+                lo2, hi2 = max(rb0, b0), min(rb1, hi)
+                if lo2 < hi2:
+                    src = scr[lo2 - b0:hi2 - b0].view(np.uint32)
+                    o0 = j + (lo2 - rb0) // WORD
+                    out[i, o0:o0 + src.size] = src
         return out
 
     def write_block(self, r0: int, r1: int, value, cols=None,
@@ -258,9 +382,16 @@ class FileBacking:
         # Fire-and-forget writebacks auto-reap their completions (errors
         # still surface at the superstep's drain); waited writes are reaped
         # by wait() itself.  Either way the completion list stays bounded.
+        if cols is not None and self.checksum is not None:
+            self._write_cols_checksummed(r0, r1, value, runs, n, wait)
+            return
         reqs = []
         if cols is None:
             buf = np.ascontiguousarray(value)
+            if self.checksum is not None:
+                # Record the *intended* CRCs at submission: a write that
+                # dies midway leaves a detectable mismatch behind.
+                self.checksum.set_rows(r0, buf.view(np.uint8))
             flat = buf.reshape(-1).view(np.uint8)
             base = r0 * self.rowbytes
             total = rows * self.rowbytes
@@ -279,11 +410,72 @@ class FileBacking:
         if wait:
             self.engine.wait(reqs)
 
+    def _write_cols_checksummed(self, r0: int, r1: int, value, runs, n,
+                                wait: bool) -> None:
+        """Column-run writes at checksum-segment granularity: new bytes come
+        from ``value``; partially-covered boundary segments read (and verify)
+        their pre-image first so neighbouring bytes survive with a CRC that
+        was never blessed over torn data."""
+        cs = self.checksum
+        rows = r1 - r0
+        vb = np.ascontiguousarray(value).view(np.uint8).reshape(
+            rows, n * WORD)
+        ranges = [(w0 * WORD, (w0 + nw) * WORD) for _, w0, nw in runs]
+        spans = span_plan(ranges, cs.chk, self.rowbytes)
+        pre_reqs, items = [], []
+        for i in range(rows):
+            base = (r0 + i) * self.rowbytes
+            for s0, s1, partial in spans:
+                b0 = s0 * cs.chk
+                b1 = min(self.rowbytes, (s1 + 1) * cs.chk)
+                buf = np.empty(b1 - b0, np.uint8)
+                for s in partial:
+                    p0, p1 = cs.seg_bounds(s)
+                    pre_reqs.append(self.engine.submit_read(
+                        base + p0, buf[p0 - b0:p1 - b0]))
+                items.append((i, s0, b0, buf, partial))
+        if pre_reqs:
+            self.engine.wait(pre_reqs)
+        wreqs = []
+        for i, s0, b0, buf, partial in items:
+            row = r0 + i
+            for s in partial:
+                p0, p1 = cs.seg_bounds(s)
+                cs.verify_span(row, s, buf[p0 - b0:p1 - b0])
+            hi = b0 + len(buf)
+            for j, w0, nw in runs:
+                rb0, rb1 = w0 * WORD, (w0 + nw) * WORD
+                lo2, hi2 = max(rb0, b0), min(rb1, hi)
+                if lo2 < hi2:
+                    buf[lo2 - b0:hi2 - b0] = vb[
+                        i, j * WORD + (lo2 - rb0):j * WORD + (hi2 - rb0)]
+            cs.set_span(row, s0, buf)
+            wreqs.append(self.engine.submit_write(
+                row * self.rowbytes + b0, buf, auto_reap=not wait))
+        if wait:
+            self.engine.wait(wreqs)
+
+    def recompute_checksums(self) -> None:
+        """Re-bless every row's CRCs from the bytes on disk (recovery: after
+        a crash the sidecar may record intended-but-torn writes for rows the
+        resume is about to regenerate anyway)."""
+        if self.checksum is None:
+            return
+        step = max(1, self.chunk_bytes // self.rowbytes)
+        for r in range(0, self.v, step):
+            r1 = min(self.v, r + step)
+            rows = self._read_rows(r, r1)
+            self.checksum.set_rows(r, rows.view(np.uint8))
+        self.checksum.flush()
+        self.checksum.fresh = False
+
     def drain(self) -> None:
         self.engine.drain()
 
     def flush(self) -> None:
         self.engine.fsync()
+        if self.checksum is not None:
+            self.checksum.flush()
 
     def close(self) -> None:
         self._finalizer()
@@ -303,21 +495,26 @@ def _close_quiet(engine, unlink_path: Optional[str]) -> None:
         pass
     if unlink_path is not None:
         _unlink_quiet(unlink_path)
+        _unlink_quiet(unlink_path + ".crc")
 
 
 def make_backing(tier: str, v: int, words: int,
                  path: Optional[str] = None, *,
                  io_driver: Optional[str] = None, io_queue_depth: int = 8,
-                 stats=None, ledger=None):
+                 stats=None, ledger=None, checksum: bool = False,
+                 fault_spec: Optional[str] = None, io_retries: int = 2,
+                 io_backoff_s: float = 0.002):
     if tier == "host":
         return HostBacking(v, words)
     if tier == "memmap":
-        return MemmapBacking(v, words, path)
+        return MemmapBacking(v, words, path, checksum=checksum)
     if tier == "file":
         return FileBacking(v, words, path,
                            io_driver=io_driver or "buffered",
                            io_queue_depth=io_queue_depth,
-                           stats=stats, ledger=ledger)
+                           stats=stats, ledger=ledger, checksum=checksum,
+                           fault_spec=fault_spec, io_retries=io_retries,
+                           io_backoff_s=io_backoff_s)
     raise ValueError(f"unknown backing tier {tier!r} (choose from {TIERS})")
 
 

@@ -411,7 +411,10 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
     bk = store.backing
     # Array-addressable backings (host/memmap) stage straight from a view;
     # the engine-backed file tier reads its chunk through the block API.
-    arr = getattr(bk, "arr", None)
+    # Checksummed backings also take the block API so every staged byte is
+    # CRC-verified — a raw view would bypass torn-write detection.
+    arr = (None if getattr(bk, "checksum", None) is not None
+           else getattr(bk, "arr", None))
     disk = store.on_disk
     ww = lo.field_words(send) // v                 # ω in store words
     off_s, off_r = lo.offset(send), lo.offset(recv)

@@ -88,7 +88,14 @@ class PemsConfig:
     backing_path: Optional[str] = None   # disk tiers: backing file location
     device_cap_bytes: Optional[int] = None  # device-memory budget for contexts
     io_driver: Optional[str] = None  # file tier: buffered | odirect | mmap
+                                     # (or "faulty:<driver>" for injection)
     io_queue_depth: int = 8     # file tier: bounded in-flight engine requests
+    io_retries: int = 2         # file tier: transient-error retries/request
+    io_backoff_s: float = 0.002  # file tier: base retry backoff (doubles)
+    fault_spec: Optional[str] = None  # faulty driver: what to inject
+                                      # (see repro.io.faults grammar)
+    checksums: bool = False     # disk tiers: per-block CRC sidecar on the
+                                # backing file, verified on every read
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
@@ -100,16 +107,40 @@ class PemsConfig:
         if self.tier == "file":
             if self.io_driver is None:
                 self.io_driver = "buffered"
-            if self.io_driver not in IO_DRIVERS:
+            base = (self.io_driver.split(":", 1)[1]
+                    if self.io_driver.startswith("faulty:")
+                    else self.io_driver)
+            if base not in IO_DRIVERS:
                 raise ValueError(
                     f"unknown io_driver {self.io_driver!r} "
-                    f"(choose from {IO_DRIVERS})"
+                    f"(choose from {IO_DRIVERS}, or 'faulty:<driver>')"
                 )
         elif self.io_driver is not None:
             raise ValueError(
                 f"io_driver={self.io_driver!r} requires tier='file' "
                 f"(got tier={self.tier!r})"
             )
+        if self.fault_spec is not None:
+            if not (self.io_driver or "").startswith("faulty:"):
+                raise ValueError(
+                    "fault_spec requires io_driver='faulty:<driver>' on "
+                    f"tier='file' (got io_driver={self.io_driver!r}, "
+                    f"tier={self.tier!r})"
+                )
+            from repro.io.faults import FaultSpec
+            FaultSpec.parse(self.fault_spec)   # syntax errors fail here
+        if self.checksums and self.tier not in ("memmap", "file"):
+            raise ValueError(
+                f"checksums=True requires a disk tier ('memmap' or 'file'), "
+                f"got tier={self.tier!r}"
+            )
+        if self.io_retries != int(self.io_retries) or self.io_retries < 0:
+            raise ValueError(
+                f"io_retries={self.io_retries!r} must be an integer >= 0")
+        self.io_retries = int(self.io_retries)
+        if self.io_backoff_s < 0:
+            raise ValueError(
+                f"io_backoff_s={self.io_backoff_s!r} must be >= 0")
         if (self.io_queue_depth != int(self.io_queue_depth)
                 or self.io_queue_depth < 1):
             raise ValueError(
@@ -166,6 +197,8 @@ class Pems:
         self.ledger = IOLedger()
         self.tier_stats = TierStats()
         self.backing = None   # last backing this executor created (tiered)
+        self.cursor = None    # optional durable SuperstepCursor: when set,
+                              # _run_tiered notes round progress on it
         if cfg.P > 1 and mesh is None:
             raise ValueError("P > 1 requires a mesh with the vp axis")
         if mesh is not None and mesh.shape[cfg.vp_axis] != cfg.P:
@@ -219,7 +252,11 @@ class Pems:
         backing = make_backing(tier, cfg.v, lo.words, backing_path,
                                io_driver=cfg.io_driver,
                                io_queue_depth=cfg.io_queue_depth,
-                               stats=self.tier_stats, ledger=self.ledger)
+                               stats=self.tier_stats, ledger=self.ledger,
+                               checksum=cfg.checksums,
+                               fault_spec=cfg.fault_spec,
+                               io_retries=cfg.io_retries,
+                               io_backoff_s=cfg.io_backoff_s)
         self.backing = backing
         store = TieredStore(lo, backing, self.ledger)
         if init_fn is not None:
@@ -390,6 +427,11 @@ class Pems:
                 led.add_tier_out(out_h.nbytes, disk)
                 stats.swap_out_s += time.perf_counter() - t0
                 stats.rounds += 1
+                if self.cursor is not None:
+                    # Advisory progress note (atomic, not fsynced): a resume
+                    # restarts the whole in-progress superstep either way,
+                    # but postmortems see how far the round loop got.
+                    self.cursor.note_round(r)
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)

@@ -196,6 +196,10 @@ class TierStats:
     rw_overlap_events: int = 0  # submissions that observed the *opposite*
                                 # direction already in flight — >0 means
                                 # reads and writes genuinely overlapped
+    retries: int = 0           # transient-error re-attempts the engine issued
+    backoff_s: float = 0.0     # scheduled retry backoff (deterministic sum)
+    permanent_errors: int = 0  # requests that errored after retries exhausted
+                               # (or a non-transient errno, first attempt)
 
     @property
     def overlap_fraction(self) -> float:

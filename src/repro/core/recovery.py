@@ -1,0 +1,133 @@
+"""Durable superstep cursor: crash recovery for the out-of-core path.
+
+A long out-of-core run is a sequence of named stages (supersteps and
+collectives) mutating one backing file.  To survive ``kill -9`` the runner
+needs exactly two tiny pieces of durable state:
+
+* **the cursor** — which stage last *committed* (its writes flushed to the
+  backing file) and which stage, if any, was *in progress* when the process
+  died.  :class:`SuperstepCursor` stores this as an atomically-replaced,
+  fsynced JSON file: a crash mid-update leaves the previous cursor intact,
+  so the resume decision is always made from consistent state.
+* **a pre-stage snapshot** of any field a stage both reads and writes
+  (taken by the runner, e.g. :func:`repro.pems_apps.psrs.psrs_run_recoverable`)
+  — rerunning such a stage from a torn row would compute garbage-from-
+  garbage, so the resume restores the snapshot first and reruns the stage
+  from its true input.  Stages whose read and write sets are disjoint rerun
+  idempotently with no snapshot.
+
+The protocol per stage ``i``::
+
+    snapshot read∩write fields (if any)      # atomic npz
+    cursor.mark_in_progress(i)               # durable
+    run the stage
+    store.flush()                            # backing + sidecar durable
+    cursor.mark_completed(i)                 # durable
+
+On resume: stages ``<= completed`` are skipped; if ``in_progress`` is set,
+the backing's checksums are recomputed (the sidecar may record intended CRCs
+for writes the crash tore — those rows are about to be regenerated), the
+snapshot is restored, and the stage reruns — bit-identically, because every
+input byte is either from a committed flush or from the snapshot.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+__all__ = ["atomic_write_json", "fsync_dir", "SuperstepCursor"]
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return                     # e.g. platforms without dir-open support
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_json(path: str, obj, durable: bool = True) -> None:
+    """Write ``obj`` as JSON to ``path`` via temp file + rename.
+
+    Readers see either the old contents or the new — never a torn mix.
+    ``durable=True`` additionally fsyncs the temp file and the directory, so
+    the new contents survive power loss; ``durable=False`` skips both fsyncs
+    for advisory state where the rename's atomicity alone is enough.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        if durable:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if durable:
+        fsync_dir(os.path.dirname(path) or ".")
+
+
+class SuperstepCursor:
+    """Tiny durable record of stage progress for one recoverable run.
+
+    State: ``{"completed": i, "in_progress": j|None, "stage": name,
+    "round": r}`` — ``completed`` is the index of the last stage whose
+    writes are flushed, ``in_progress`` the stage that was running (None
+    between stages), ``round`` an advisory executor-round note within the
+    in-progress stage.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._cur = self._load()
+
+    def _load(self) -> Optional[dict]:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    # ----------------------------------------------------------------- state
+    def state(self) -> Optional[dict]:
+        """The persisted state, or None for a fresh run."""
+        return None if self._cur is None else dict(self._cur)
+
+    @property
+    def completed(self) -> int:
+        return -1 if self._cur is None else int(self._cur.get("completed", -1))
+
+    @property
+    def in_progress(self) -> Optional[int]:
+        return None if self._cur is None else self._cur.get("in_progress")
+
+    # ------------------------------------------------------------- transitions
+    def mark_in_progress(self, stage: int, name: Optional[str] = None) -> None:
+        self._cur = {"completed": self.completed, "in_progress": stage,
+                     "stage": name, "round": None}
+        atomic_write_json(self.path, self._cur, durable=True)
+
+    def mark_completed(self, stage: int, name: Optional[str] = None) -> None:
+        self._cur = {"completed": stage, "in_progress": None,
+                     "stage": name, "round": None}
+        atomic_write_json(self.path, self._cur, durable=True)
+
+    def note_round(self, r: int) -> None:
+        """Advisory executor-round progress (atomic but not fsynced — a
+        resume restarts the whole in-progress stage regardless)."""
+        if self._cur is None:
+            self._cur = {"completed": -1, "in_progress": None,
+                         "stage": None, "round": None}
+        self._cur["round"] = r
+        atomic_write_json(self.path, self._cur, durable=False)
+
+    def clear(self) -> None:
+        self._cur = None
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass

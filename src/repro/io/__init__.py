@@ -7,9 +7,21 @@ An io_uring-style submission/completion-queue engine
 unsupported), and an ``mmap`` adapter wrapping the historical memmap path.
 ``repro.core.backing.FileBacking`` (``tier="file"``) and the checkpoint
 manager stream through it; ``benchmarks/bench_io.py`` sweeps it.
+
+Robustness layers on the same path: transient-error retries with bounded
+exponential backoff in the engine, a deterministic fault-injecting driver
+wrapper (:mod:`repro.io.faults`, ``io_driver="faulty:<inner>"``), and
+per-block CRC sidecars (:mod:`repro.io.checksum`) that detect torn writes.
 """
 
 from .aligned import ALIGN, AlignedPool, aligned_empty, align_down, align_up
+from .checksum import (
+    CHECK_BLOCK,
+    CHECKSUM_ALGO,
+    ChecksumSidecar,
+    IntegrityError,
+    crc_bytes,
+)
 from .drivers import (
     BufferedFile,
     IO_DRIVERS,
@@ -18,20 +30,29 @@ from .drivers import (
     ensure_file_size,
     open_file,
 )
-from .engine import IOEngine, IORequest
+from .engine import IOEngine, IORequest, TRANSIENT_ERRNOS
+from .faults import FaultSpec, FaultyFile
 
 __all__ = [
     "ALIGN",
     "AlignedPool",
     "BufferedFile",
+    "CHECK_BLOCK",
+    "CHECKSUM_ALGO",
+    "ChecksumSidecar",
+    "FaultSpec",
+    "FaultyFile",
+    "IntegrityError",
     "IOEngine",
     "IORequest",
     "IO_DRIVERS",
     "MmapFile",
     "ODirectFile",
+    "TRANSIENT_ERRNOS",
     "aligned_empty",
     "align_down",
     "align_up",
+    "crc_bytes",
     "ensure_file_size",
     "open_file",
 ]

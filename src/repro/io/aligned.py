@@ -30,7 +30,13 @@ def aligned_empty(nbytes: int, align: int = ALIGN) -> np.ndarray:
     """An uninitialised uint8 buffer whose data pointer is ``align``-aligned
     (and whose length is an exact multiple of ``align``)."""
     nbytes = align_up(max(nbytes, 1), align)
-    raw = np.empty(nbytes + align, np.uint8)
+    try:
+        raw = np.empty(nbytes + align, np.uint8)
+    except MemoryError as e:
+        raise MemoryError(
+            f"cannot allocate a {nbytes + align:,}-byte aligned I/O bounce "
+            "buffer (O_DIRECT pool); lower io_queue_depth or the transfer "
+            "chunk size, or free host memory") from e
     off = (-raw.ctypes.data) % align
     buf = raw[off:off + nbytes]
     assert buf.ctypes.data % align == 0

@@ -27,6 +27,7 @@ must not zero it).
 
 from __future__ import annotations
 
+import errno as _errno
 import os
 import warnings
 from typing import Optional
@@ -38,18 +39,47 @@ from .aligned import ALIGN, AlignedPool, align_down, align_up
 IO_DRIVERS = ("buffered", "odirect", "mmap")
 
 
+def _io_error(e: OSError, op: str, path, driver: str, offset: int,
+              nbytes: int) -> OSError:
+    """Re-raise helper: same errno, actionable message.
+
+    A raw ``OSError`` surfacing from a worker thread names neither the file
+    nor the request; this wraps it with op/offset/size/driver context (and a
+    hint for ENOSPC) while keeping ``errno`` intact so the engine's
+    transient/permanent classification still works.
+    """
+    code = _errno.errorcode.get(e.errno, str(e.errno))
+    msg = (f"{op} of {nbytes:,} bytes at offset {offset:,} on {path!r} "
+           f"({driver} driver) failed: [{code}] {e.strerror or e}")
+    if e.errno == _errno.ENOSPC:
+        msg += (" — the filesystem holding this backing file is out of "
+                "space; free space or point backing_path at a larger volume")
+    out = OSError(e.errno, msg)
+    out.__cause__ = e
+    return out
+
+
 def ensure_file_size(path: str, size: int) -> None:
     """Create ``path`` or extend it to ``size`` bytes — never truncate.
 
     A caller-provided backing file holding real data (e.g. a resume after a
     checkpoint) keeps its contents; only missing bytes are added.
     """
-    if not os.path.exists(path):
-        with open(path, "wb") as f:
-            f.truncate(size)
-    elif os.path.getsize(path) < size:
-        with open(path, "r+b") as f:
-            f.truncate(size)
+    try:
+        if not os.path.exists(path):
+            with open(path, "wb") as f:
+                f.truncate(size)
+        elif os.path.getsize(path) < size:
+            with open(path, "r+b") as f:
+                f.truncate(size)
+    except OSError as e:
+        code = _errno.errorcode.get(e.errno, str(e.errno))
+        msg = (f"cannot create/extend backing file {path!r} to {size:,} "
+               f"bytes: [{code}] {e.strerror or e}")
+        if e.errno == _errno.ENOSPC:
+            msg += (" — the filesystem is out of space; free space or point "
+                    "backing_path/the checkpoint dir at a larger volume")
+        raise OSError(e.errno, msg) from e
 
 
 class BufferedFile:
@@ -68,12 +98,20 @@ class BufferedFile:
     def pread_into(self, offset: int, out) -> int:
         """Fill the writable buffer ``out`` from ``offset``; returns the
         syscall-level byte count."""
-        return _buffered_pread(self.fd, memoryview(out).cast("B"), offset)
+        mv = memoryview(out).cast("B")
+        try:
+            return _buffered_pread(self.fd, mv, offset)
+        except OSError as e:
+            raise _io_error(e, "read", self.path, self.driver, offset,
+                            len(mv))
 
     def pwrite(self, offset: int, data) -> int:
-        return _buffered_pwrite(
-            self.fd, memoryview(np.ascontiguousarray(data)).cast("B"),
-            offset)
+        mv = memoryview(np.ascontiguousarray(data)).cast("B")
+        try:
+            return _buffered_pwrite(self.fd, mv, offset)
+        except OSError as e:
+            raise _io_error(e, "write", self.path, self.driver, offset,
+                            len(mv))
 
     def flush(self) -> None:
         os.fsync(self.fd)
@@ -144,46 +182,53 @@ class ODirectFile:
     def pread_into(self, offset: int, out) -> int:
         mv = memoryview(out).cast("B")
         n = len(mv)
-        if self.fallback:
-            return _buffered_pread(self.fd, mv, offset)
-        a0 = align_down(offset, ALIGN)
-        a1 = align_up(offset + n, ALIGN)
-        buf = self.pool.acquire(a1 - a0)
         try:
-            got = os.preadv(self.fd, [buf[:a1 - a0]], a0)
-            if got < a1 - a0:               # short read past the data tail
-                buf[got:a1 - a0] = 0
-            mv[:] = buf[offset - a0:offset - a0 + n]
-        finally:
-            self.pool.release(buf)
-        return a1 - a0
+            if self.fallback:
+                return _buffered_pread(self.fd, mv, offset)
+            a0 = align_down(offset, ALIGN)
+            a1 = align_up(offset + n, ALIGN)
+            buf = self.pool.acquire(a1 - a0)
+            try:
+                got = os.preadv(self.fd, [buf[:a1 - a0]], a0)
+                if got < a1 - a0:           # short read past the data tail
+                    buf[got:a1 - a0] = 0
+                mv[:] = buf[offset - a0:offset - a0 + n]
+            finally:
+                self.pool.release(buf)
+            return a1 - a0
+        except OSError as e:
+            raise _io_error(e, "read", self.path, self.driver, offset, n)
 
     def pwrite(self, offset: int, data) -> int:
         src = memoryview(np.ascontiguousarray(data)).cast("B")
         n = len(src)
-        if self.fallback:
-            return _buffered_pwrite(self.fd, src, offset)
-        a0 = align_down(offset, ALIGN)
-        a1 = align_up(offset + n, ALIGN)
-        buf = self.pool.acquire(a1 - a0)
-        syscall = a1 - a0
         try:
-            if a0 < offset:                 # head block is partially ours
-                os.preadv(self.fd, [buf[:ALIGN]], a0)
-                syscall += ALIGN
-            tail = a1 - ALIGN
-            if offset + n < a1 and tail >= a0 + (ALIGN if a0 < offset else 0):
-                os.preadv(self.fd, [buf[tail - a0:a1 - a0]], tail)
-                syscall += ALIGN
-            buf[offset - a0:offset - a0 + n] = src
-            written = 0
-            view = buf[:a1 - a0]
-            while written < len(view):
-                written += os.pwritev(self.fd, [view[written:]],
-                                      a0 + written)
-        finally:
-            self.pool.release(buf)
-        return syscall
+            if self.fallback:
+                return _buffered_pwrite(self.fd, src, offset)
+            a0 = align_down(offset, ALIGN)
+            a1 = align_up(offset + n, ALIGN)
+            buf = self.pool.acquire(a1 - a0)
+            syscall = a1 - a0
+            try:
+                if a0 < offset:             # head block is partially ours
+                    os.preadv(self.fd, [buf[:ALIGN]], a0)
+                    syscall += ALIGN
+                tail = a1 - ALIGN
+                if (offset + n < a1
+                        and tail >= a0 + (ALIGN if a0 < offset else 0)):
+                    os.preadv(self.fd, [buf[tail - a0:a1 - a0]], tail)
+                    syscall += ALIGN
+                buf[offset - a0:offset - a0 + n] = src
+                written = 0
+                view = buf[:a1 - a0]
+                while written < len(view):
+                    written += os.pwritev(self.fd, [view[written:]],
+                                          a0 + written)
+            finally:
+                self.pool.release(buf)
+            return syscall
+        except OSError as e:
+            raise _io_error(e, "write", self.path, self.driver, offset, n)
 
     def flush(self) -> None:
         os.fsync(self.fd)
@@ -235,8 +280,20 @@ class MmapFile:
         self.mm = None
 
 
-def open_file(path: str, size: Optional[int], driver: str):
-    """Driver factory: ``buffered`` | ``odirect`` | ``mmap``."""
+def open_file(path: str, size: Optional[int], driver: str,
+              fault_spec: Optional[str] = None):
+    """Driver factory: ``buffered`` | ``odirect`` | ``mmap``, or any of
+    them wrapped for fault injection as ``faulty:<inner>`` (the optional
+    ``fault_spec`` string selects what to inject — see
+    :mod:`repro.io.faults`)."""
+    if driver.startswith("faulty:"):
+        from .faults import FaultSpec, FaultyFile
+        inner = open_file(path, size, driver.split(":", 1)[1])
+        return FaultyFile(inner, FaultSpec.parse(fault_spec))
+    if fault_spec is not None:
+        raise ValueError(
+            f"fault_spec requires a 'faulty:<driver>' io driver, got "
+            f"{driver!r}")
     if driver == "buffered":
         return BufferedFile(path, size)
     if driver == "odirect":
@@ -244,7 +301,8 @@ def open_file(path: str, size: Optional[int], driver: str):
     if driver == "mmap":
         return MmapFile(path, size)
     raise ValueError(
-        f"unknown io driver {driver!r} (choose from {IO_DRIVERS})")
+        f"unknown io driver {driver!r} (choose from {IO_DRIVERS} "
+        "or 'faulty:<driver>')")
 
 
 def _buffered_pread(fd: int, mv: memoryview, offset: int) -> int:

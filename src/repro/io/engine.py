@@ -21,6 +21,15 @@ Semantics:
 * For drivers with an alignment unit (``odirect``), requests whose aligned
   block ranges overlap are serialised when either is a write — the
   read-modify-write of boundary blocks would otherwise race.
+* Transient errors (``EIO``/``EINTR``/``EAGAIN``/``ETIMEDOUT``) are retried
+  in the worker up to ``retries`` times with exponential backoff and
+  deterministic jitter before being treated as permanent; permanent errors
+  (everything else, and exhausted retries) propagate per-request through
+  ``wait``/``drain`` exactly as before.  ``retries``/``backoff_s``/
+  ``permanent_errors`` counters record the policy's work.
+* ``drain(timeout=)`` raises a :class:`TimeoutError` naming the still
+  in-flight requests instead of deadlocking on a hung worker (a stalled
+  disk, an injected latency fault).
 
 The engine mirrors its measurements into the caller's
 :class:`~repro.core.iostats.TierStats`-shaped object (``max_queue_depth``,
@@ -32,6 +41,7 @@ this module stays import-independent of :mod:`repro.core`.
 
 from __future__ import annotations
 
+import errno
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -41,13 +51,18 @@ from .aligned import align_down, align_up
 
 _MAX_WORKERS = 16
 
+# Errnos worth retrying: the device/kernel may succeed on a second attempt.
+# Everything else (EINVAL, ENOSPC, EBADMSG/IntegrityError, ...) is permanent.
+TRANSIENT_ERRNOS = frozenset(
+    {errno.EIO, errno.EINTR, errno.EAGAIN, errno.ETIMEDOUT})
+
 
 class IORequest:
     """One submitted transfer.  ``wait()`` blocks until completion and
     re-raises any worker error; ``done`` is non-blocking."""
 
     __slots__ = ("op", "offset", "nbytes", "data", "out", "syscall_bytes",
-                 "error", "auto_reap", "_a0", "_a1", "_event")
+                 "error", "auto_reap", "attempts", "_a0", "_a1", "_event")
 
     def __init__(self, op: str, offset: int, nbytes: int, data, out,
                  align: int, auto_reap: bool = False):
@@ -58,6 +73,7 @@ class IORequest:
         self.out = out                  # read destination buffer
         self.syscall_bytes = 0
         self.auto_reap = auto_reap      # fire-and-forget: skip _completed
+        self.attempts = 0               # driver calls issued (1 = no retry)
         self.error: Optional[BaseException] = None
         self._a0 = align_down(offset, align) if align > 1 else offset
         self._a1 = (align_up(offset + nbytes, align) if align > 1
@@ -79,13 +95,25 @@ class IOEngine:
     """Bounded submission/completion queues over one driver file."""
 
     def __init__(self, file, queue_depth: int = 8, stats=None, ledger=None,
-                 workers: Optional[int] = None):
+                 workers: Optional[int] = None, retries: int = 2,
+                 backoff_s: float = 0.002, backoff_max_s: float = 0.25,
+                 jitter: float = 0.25):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self.file = file
         self.queue_depth = queue_depth
         self.stats = stats
         self.ledger = ledger
+        # Retry policy for transient errors (see TRANSIENT_ERRNOS): up to
+        # ``retries`` re-attempts, delay min(backoff_max_s, backoff_s·2^i)
+        # scaled by a deterministic per-(request, attempt) jitter factor so
+        # schedules are reproducible yet colliding retries still spread out.
+        self.max_retries = retries
+        self._backoff_base_s = backoff_s
+        self._backoff_cap_s = backoff_max_s
+        self._jitter = jitter
         self._slots = threading.Semaphore(queue_depth)
         self._lock = threading.Lock()
         self._stats_lock = threading.Lock()   # guards _bump only; may be
@@ -104,6 +132,9 @@ class IOEngine:
         self.rw_overlap_events = 0
         self.syscall_read_bytes = 0
         self.syscall_write_bytes = 0
+        self.retries = 0                # transient re-attempts issued
+        self.backoff_s = 0.0            # scheduled backoff (deterministic)
+        self.permanent_errors = 0       # requests that finally errored
         # Test hook: workers block here before touching the file, so tests
         # can hold requests in flight deterministically.  Set by default.
         self._gate = threading.Event()
@@ -172,16 +203,44 @@ class IOEngine:
         return False
 
     # -------------------------------------------------------------- execution
+    def _backoff_delay(self, req: IORequest, attempt: int) -> float:
+        d = min(self._backoff_cap_s, self._backoff_base_s * (2 ** attempt))
+        if self._jitter:
+            # Deterministic jitter in [1, 1+jitter): a hash of the request's
+            # identity and the attempt number, not a PRNG — retry schedules
+            # are exactly reproducible for tests and postmortems.
+            h = (req.offset * 1000003 + attempt * 8191 + req.nbytes)
+            h = (h * 2654435761) & 0xFFFFFFFF
+            d *= 1.0 + self._jitter * (h / 2.0 ** 32)
+        return d
+
     def _execute(self, req: IORequest) -> None:
         self._gate.wait()
-        try:
-            if req.op == "read":
-                n = self.file.pread_into(req.offset, req.out)
-            else:
-                n = self.file.pwrite(req.offset, req.data)
-            req.syscall_bytes = n
-        except BaseException as e:   # propagate through wait()/drain()
-            req.error = e
+        attempt = 0
+        while True:
+            try:
+                if req.op == "read":
+                    n = self.file.pread_into(req.offset, req.out)
+                else:
+                    n = self.file.pwrite(req.offset, req.data)
+                req.syscall_bytes = n
+                req.attempts = attempt + 1
+                break
+            except BaseException as e:   # propagate through wait()/drain()
+                if (isinstance(e, OSError)
+                        and e.errno in TRANSIENT_ERRNOS
+                        and attempt < self.max_retries):
+                    delay = self._backoff_delay(req, attempt)
+                    self._bump("retries", 1)
+                    self._bump("backoff_s", delay)
+                    attempt += 1
+                    if delay > 0:
+                        time.sleep(delay)
+                    continue
+                req.error = e
+                req.attempts = attempt + 1
+                self._bump("permanent_errors", 1)
+                break
         with self._lock:
             self._inflight.remove(req)
             if req.op == "read":
@@ -231,12 +290,35 @@ class IOEngine:
         if err is not None:
             raise err
 
-    def drain(self) -> None:
+    def drain(self, timeout: Optional[float] = None) -> None:
         """Block until no request is in flight.  On return,
-        ``in_flight == 0`` and every error raised."""
+        ``in_flight == 0`` and every error raised.
+
+        With ``timeout`` (seconds), a hung worker raises a diagnostic
+        :class:`TimeoutError` naming the stuck requests instead of
+        deadlocking the caller; the requests stay in flight (a later
+        ``drain()`` can still collect them if the worker recovers).
+        """
+        deadline = (time.monotonic() + timeout) if timeout is not None \
+            else None
         with self._quiet:
             while self._inflight:
-                self._quiet.wait()
+                if deadline is None:
+                    self._quiet.wait()
+                    continue
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    pend = [(r.op, r.offset, r.nbytes)
+                            for r in self._inflight]
+                    raise TimeoutError(
+                        f"IOEngine.drain timed out after {timeout}s with "
+                        f"{len(pend)} request(s) still in flight on "
+                        f"{getattr(self.file, 'path', '?')!r} (driver="
+                        f"{getattr(self.file, 'driver', '?')}): first "
+                        f"{pend[:4]} as (op, offset, nbytes) — a worker is "
+                        "stuck; check for a stalled device, an injected "
+                        "latency fault, or a held test gate")
+                self._quiet.wait(left)
             done, self._completed = self._completed, []
         for r in done:
             if r.error is not None:

@@ -17,21 +17,35 @@ which preserves the 2n/v per-receiver bound even for constant inputs.
 
 from __future__ import annotations
 
+import os
+import signal
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ContextLayout, Pems, PemsConfig
+from repro.core import ContextLayout, Pems, PemsConfig, SuperstepCursor
 from .common import INT_MAX, group_by_dest
+
+# Fields each stage both reads and writes: rerunning such a stage after a
+# mid-stage crash would compute from possibly-torn rows, so the recoverable
+# runner snapshots them before the stage and restores on a dirty resume.
+# Stages absent here have disjoint read/write sets and rerun idempotently.
+# (Kept as a side table so ``steps`` stays a plain (name, fn) list.)
+STAGE_SNAPSHOT_FIELDS = {
+    "sort_sample": ("data",),
+    "bcast_splitters": ("gsplit",),
+    "merge": ("oflow",),
+}
 
 
 def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
            mode: str, local_sort, use_kernel: bool = True,
            tier: str = "device", backing_path=None, device_cap_bytes=None,
            P: int = 1, mesh=None, alpha=None,
-           io_driver=None, io_queue_depth=None):
+           io_driver=None, io_queue_depth=None,
+           fault_spec=None, checksums: bool = False, io_retries=None):
     # One home for the PSRS capacity defaults: the always-safe per-message
     # bound n/v and the 2n/v per-receiver guarantee.
     cap = n_v if cap is None else cap
@@ -55,6 +69,12 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         io_kw["io_driver"] = io_driver
     if io_queue_depth is not None:
         io_kw["io_queue_depth"] = io_queue_depth
+    if fault_spec is not None:
+        io_kw["fault_spec"] = fault_spec
+    if io_retries is not None:
+        io_kw["io_retries"] = io_retries
+    if checksums:
+        io_kw["checksums"] = True
     pems = Pems(PemsConfig(v=v, k=k, P=P, driver=driver, tier=tier,
                            backing_path=backing_path, alpha=alpha,
                            device_cap_bytes=device_cap_bytes, **io_kw),
@@ -174,6 +194,9 @@ def psrs_plan(
     alpha=None,
     io_driver=None,
     io_queue_depth=None,
+    fault_spec=None,
+    checksums: bool = False,
+    io_retries=None,
 ):
     """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
 
@@ -187,6 +210,7 @@ def psrs_plan(
         use_kernel=use_kernel, tier=tier, backing_path=backing_path,
         device_cap_bytes=device_cap_bytes, P=P, mesh=mesh, alpha=alpha,
         io_driver=io_driver, io_queue_depth=io_queue_depth,
+        fault_spec=fault_spec, checksums=checksums, io_retries=io_retries,
     )
     return pems, load, steps, extract
 
@@ -210,6 +234,9 @@ def psrs_sort(
     alpha=None,
     io_driver=None,
     io_queue_depth=None,
+    fault_spec=None,
+    checksums: bool = False,
+    io_retries=None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
@@ -247,11 +274,171 @@ def psrs_sort(
                               device_cap_bytes=device_cap_bytes,
                               P=P, mesh=mesh, alpha=alpha,
                               io_driver=io_driver,
-                              io_queue_depth=io_queue_depth)
+                              io_queue_depth=io_queue_depth,
+                              fault_spec=fault_spec, checksums=checksums,
+                              io_retries=io_retries)
     data = keys.reshape(v, n_v)
     if tier != "device":
         data = np.asarray(data)
     result, rcount, oflow = program(data)
+    result = np.asarray(result)
+    rcount = np.asarray(rcount)[:, 0]
+    if np.asarray(oflow).any():
+        raise OverflowError(
+            "PSRS message capacity exceeded; raise cap/rcap "
+            f"(cap={cap}, rcap={rcap})"
+        )
+    out = np.concatenate([result[i, : rcount[i]] for i in range(v)])
+    if return_pems:
+        return out, pems
+    return out
+
+
+def _snapshot_path(state_dir: str) -> str:
+    return os.path.join(state_dir, "stage_snapshot.npz")
+
+
+def _save_snapshot(state_dir: str, stage: int, fields: dict) -> None:
+    """Atomically persist the pre-stage copy of the stage's read∩write
+    fields (restored before a dirty rerun — see STAGE_SNAPSHOT_FIELDS)."""
+    path = _snapshot_path(state_dir)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __stage__=np.int64(stage), **fields)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _load_snapshot(state_dir: str, stage: int):
+    """The snapshot's field dict, iff it belongs to ``stage``."""
+    try:
+        with np.load(_snapshot_path(state_dir)) as z:
+            if int(z["__stage__"]) != stage:
+                return None
+            return {k: z[k] for k in z.files if k != "__stage__"}
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def psrs_run_recoverable(
+    keys,
+    v: int,
+    *,
+    state_dir: str,
+    k: int = 1,
+    driver: str = "explicit",
+    mode: str = "direct",
+    cap: Optional[int] = None,
+    rcap: Optional[int] = None,
+    local_sort=jnp.sort,
+    use_kernel: bool = True,
+    tier: str = "file",
+    io_driver=None,
+    io_queue_depth=None,
+    fault_spec=None,
+    checksums: bool = True,
+    io_retries=None,
+    device_cap_bytes=None,
+    crash_after_stage=None,
+    crash_in_stage=None,
+    return_pems: bool = False,
+):
+    """PSRS with durable superstep recovery: survives ``kill -9``.
+
+    Runs the :func:`psrs_plan` stages against a backing file in
+    ``state_dir``, recording a durable :class:`SuperstepCursor` around every
+    stage and an atomic pre-stage snapshot of the fields the stage both
+    reads and writes (see ``STAGE_SNAPSHOT_FIELDS`` — rerunning those from
+    possibly-torn rows would be garbage-from-garbage).  Killed at *any*
+    point — between stages, mid-stage, even mid-``pwrite`` — a rerun with
+    the same arguments resumes from the last completed stage and produces
+    output bit-identical to an uninterrupted run.
+
+    ``checksums`` (default on) adds per-block CRCs to the backing file so a
+    torn write in the in-progress stage is detected and healed by the rerun
+    instead of silently merged; a torn write can only live in the
+    in-progress stage because completed stages are flushed before their
+    cursor commit.
+
+    ``crash_after_stage`` / ``crash_in_stage`` (stage name or index;
+    ``"load"`` is stage 0) SIGKILL the process at the stage boundary /
+    between the stage's compute and its flush — the chaos-test hooks.
+    """
+    keys = np.asarray(keys, np.int32)
+    n = keys.size
+    if n % v:
+        raise ValueError(f"n={n} must be divisible by v={v}")
+    if tier not in ("memmap", "file"):
+        raise ValueError(
+            f"recovery needs a disk tier ('memmap' or 'file'), got {tier!r}")
+    n_v = n // v
+    os.makedirs(state_dir, exist_ok=True)
+    backing_path = os.path.join(state_dir, "ctx.bin")
+    pems, _load_unused, steps, extract = psrs_plan(
+        v, n_v, k=k, driver=driver, mode=mode, cap=cap, rcap=rcap,
+        local_sort=local_sort, use_kernel=use_kernel, tier=tier,
+        backing_path=backing_path, device_cap_bytes=device_cap_bytes,
+        io_driver=io_driver, io_queue_depth=io_queue_depth,
+        fault_spec=fault_spec, checksums=checksums, io_retries=io_retries)
+
+    data_blocks = keys.reshape(v, n_v)
+    # "load" is stage 0 (idempotent: rewrites data from the caller's input).
+    # pems.init() runs exactly once below, so load goes through with_field
+    # rather than psrs_plan's own load() (which would init a second engine
+    # on the same backing file).
+    stages = ([("load", lambda st: st.with_field("data", data_blocks))]
+              + list(steps))
+
+    def _stage_index(which):
+        if which is None:
+            return None
+        if isinstance(which, str):
+            for i, (name, _) in enumerate(stages):
+                if name == which:
+                    return i
+            raise ValueError(f"unknown stage {which!r}")
+        return int(which)
+
+    crash_after = _stage_index(crash_after_stage)
+    crash_in = _stage_index(crash_in_stage)
+
+    cursor = SuperstepCursor(os.path.join(state_dir, "cursor.json"))
+    pems.cursor = cursor
+    st = cursor.state()
+    completed = -1 if st is None else int(st.get("completed", -1))
+    in_prog = None if st is None else st.get("in_progress")
+
+    store = pems.init()      # create-or-reuse: committed rows are kept
+    if in_prog is not None:
+        bk = store.backing
+        if getattr(bk, "checksum", None) is not None:
+            # The sidecar records *intended* CRCs for writes the crash may
+            # have torn; those rows belong to the in-progress stage and are
+            # about to be regenerated, so re-bless the bytes on disk.
+            bk.recompute_checksums()
+        snap = _load_snapshot(state_dir, int(in_prog))
+        if snap is not None:
+            for fname, val in snap.items():
+                store = store.with_field(fname, val)
+
+    for i, (name, fn) in enumerate(stages):
+        if i <= completed:
+            continue
+        fields = STAGE_SNAPSHOT_FIELDS.get(name, ())
+        if fields:
+            _save_snapshot(state_dir, i,
+                           {f: np.asarray(store.field(f)) for f in fields})
+        cursor.mark_in_progress(i, name)
+        store = fn(store)
+        if crash_in == i:
+            os.kill(os.getpid(), signal.SIGKILL)
+        store.flush()
+        cursor.mark_completed(i, name)
+        if crash_after == i:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    result, rcount, oflow = extract(store)
     result = np.asarray(result)
     rcount = np.asarray(rcount)[:, 0]
     if np.asarray(oflow).any():

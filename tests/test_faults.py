@@ -1,0 +1,350 @@
+"""Fault-injection + integrity layer: FaultSpec grammar, deterministic
+injection through the driver proxy, engine retry/backoff policy,
+permanent-error propagation, drain(timeout=) diagnostics, per-block CRC
+sidecars (round-trip, flip-a-byte, adopt/recompute), and the checkpoint
+manifest's chunk CRCs."""
+
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FileBacking, MemmapBacking, PemsConfig
+from repro.io import (
+    CHECK_BLOCK,
+    ChecksumSidecar,
+    FaultSpec,
+    FaultyFile,
+    IntegrityError,
+    IOEngine,
+    TRANSIENT_ERRNOS,
+    ensure_file_size,
+    open_file,
+)
+from repro.io.checksum import span_plan
+
+
+# --------------------------------------------------------------------------- #
+# FaultSpec grammar                                                            #
+# --------------------------------------------------------------------------- #
+
+def test_fault_spec_parses_full_grammar():
+    fs = FaultSpec.parse(
+        "seed=7; eio@p0.02:x2; lat@w0-3:0.003; torn@w44:0.25;"
+        "enospc@b0-4095; kill@r12; eio@*")
+    assert fs.seed == 7
+    eio_p, lat, torn, enospc, kill, eio_star = fs.clauses
+    assert (eio_p.kind, eio_p.prob, eio_p.param) == ("eio", 0.02, 2.0)
+    assert (lat.op, lat.lo, lat.hi, lat.param) == ("write", 0, 3, 0.003)
+    assert (torn.op, torn.lo, torn.hi, torn.param) == ("write", 44, 44, 0.25)
+    assert (enospc.byte_lo, enospc.byte_hi) == (0, 4095)
+    assert (kill.op, kill.lo) == ("read", 12)
+    assert eio_star.lo is None and eio_star.prob is None
+    assert FaultSpec.parse(None).clauses == []
+    assert FaultSpec.parse("").clauses == []
+
+
+@pytest.mark.parametrize("bad, match", [
+    ("flip@*", "kind"),
+    ("eio", "expected"),
+    ("eio@z9", "selector"),
+    ("eio@p1.5", "probability"),
+    ("eio@*:k3", "eio param"),
+    ("torn@w0:0.0", "torn fraction"),
+    ("torn@w0:1.5", "torn fraction"),
+    ("lat@*:-1", "negative latency"),
+    ("enospc@*:0.5", "no parameter"),
+    ("kill@*:now", "no parameter"),
+    ("seed=abc", "seed"),
+])
+def test_fault_spec_rejects_bad_clauses(bad, match):
+    with pytest.raises(ValueError, match=match):
+        FaultSpec.parse(bad)
+
+
+def test_config_validates_fault_and_integrity_knobs(tmp_path):
+    with pytest.raises(ValueError, match="unknown io_driver"):
+        PemsConfig(v=4, k=2, tier="file", io_driver="faulty:uring")
+    with pytest.raises(ValueError, match="faulty"):
+        PemsConfig(v=4, k=2, tier="file", io_driver="buffered",
+                   fault_spec="eio@*")
+    with pytest.raises(ValueError, match="kind"):
+        PemsConfig(v=4, k=2, tier="file", io_driver="faulty:buffered",
+                   fault_spec="flip@*")
+    with pytest.raises(ValueError, match="checksums"):
+        PemsConfig(v=4, k=2, tier="host", checksums=True)
+    with pytest.raises(ValueError, match="io_retries"):
+        PemsConfig(v=4, k=2, io_retries=-1)
+    with pytest.raises(ValueError, match="io_backoff_s"):
+        PemsConfig(v=4, k=2, io_backoff_s=-0.1)
+    # Valid: faulty driver resolves, parses its spec at construction.
+    cfg = PemsConfig(v=4, k=2, tier="file", io_driver="faulty:buffered",
+                     fault_spec="seed=3;eio@p0.01",
+                     backing_path=str(tmp_path / "c.bin"))
+    assert cfg.io_driver == "faulty:buffered"
+    with pytest.raises(ValueError, match="fault_spec"):
+        open_file(str(tmp_path / "x.bin"), 4096, "buffered",
+                  fault_spec="eio@*")
+
+
+# --------------------------------------------------------------------------- #
+# Engine retry policy over injected faults                                     #
+# --------------------------------------------------------------------------- #
+
+def _faulty_engine(tmp_path, spec, retries=2, name="f.bin", **kw):
+    f = open_file(str(tmp_path / name), 1 << 16, "faulty:buffered",
+                  fault_spec=spec)
+    return f, IOEngine(f, queue_depth=1, retries=retries, **kw)
+
+
+def test_transient_eio_absorbed_by_retries(tmp_path):
+    f, eng = _faulty_engine(tmp_path, "eio@w0:x2")
+    try:
+        data = np.full(4096, 7, np.uint8)
+        eng.submit_write(0, data).wait()
+        out = np.empty(4096, np.uint8)
+        eng.submit_read(0, out).wait()
+        np.testing.assert_array_equal(out, data)
+        assert f.injected["eio"] == 2
+        assert eng.retries == 2
+        assert eng.permanent_errors == 0
+        assert eng.backoff_s > 0.0
+        assert f.driver == "faulty:buffered"
+    finally:
+        eng.close()
+
+
+def test_retry_backoff_is_deterministic(tmp_path):
+    walls = []
+    for name in ("a.bin", "b.bin"):
+        f, eng = _faulty_engine(tmp_path, "eio@w0:x2;eio@w5:x1", name=name)
+        try:
+            for i in range(8):
+                eng.submit_write(i * 4096, np.full(4096, i, np.uint8)).wait()
+            walls.append((eng.retries, eng.backoff_s, f.injected["eio"]))
+        finally:
+            eng.close()
+    assert walls[0] == walls[1]
+    assert walls[0][0] == 3 and walls[0][1] > 0.0
+
+
+def test_exhausted_retries_become_permanent(tmp_path):
+    f, eng = _faulty_engine(tmp_path, "eio@w0:x5", retries=2)
+    try:
+        req = eng.submit_write(0, np.zeros(4096, np.uint8))
+        with pytest.raises(OSError) as ei:
+            req.wait()
+        assert ei.value.errno in TRANSIENT_ERRNOS   # EIO, just out of budget
+        assert eng.retries == 2                     # budget was spent
+        assert eng.permanent_errors == 1
+        assert f.injected["eio"] == 3               # 1 try + 2 retries
+        with pytest.raises(OSError):
+            eng.drain()                 # the completion still reaps as error
+    finally:
+        eng.close()
+
+
+def test_enospc_is_never_retried(tmp_path):
+    f, eng = _faulty_engine(tmp_path, "enospc@w*", retries=3)
+    try:
+        req = eng.submit_write(0, np.zeros(4096, np.uint8))
+        with pytest.raises(OSError, match="ENOSPC|injected"):
+            req.wait()
+        assert eng.retries == 0                     # permanent: no retry
+        assert eng.permanent_errors == 1
+        assert f.injected["enospc"] == 1
+        with pytest.raises(OSError):
+            eng.drain()
+    finally:
+        eng.close()
+
+
+def test_injected_latency_is_counted_and_survived(tmp_path):
+    f, eng = _faulty_engine(tmp_path, "lat@*:0.001")
+    try:
+        data = np.full(4096, 3, np.uint8)
+        eng.submit_write(0, data).wait()
+        out = np.empty(4096, np.uint8)
+        eng.submit_read(0, out).wait()
+        np.testing.assert_array_equal(out, data)
+        assert f.injected["lat"] == 2
+        assert eng.permanent_errors == 0
+    finally:
+        eng.close()
+
+
+def test_drain_timeout_names_the_stuck_requests(tmp_path):
+    f = open_file(str(tmp_path / "t.bin"), 1 << 16, "buffered")
+    eng = IOEngine(f, queue_depth=2)
+    try:
+        eng._gate.clear()               # hold workers: requests never finish
+        eng.submit_write(8192, np.zeros(4096, np.uint8))
+        with pytest.raises(TimeoutError) as ei:
+            eng.drain(timeout=0.2)
+        msg = str(ei.value)
+        assert "t.bin" in msg and "8192" in msg and "in flight" in msg
+        assert eng.in_flight == 1       # still in flight, not dropped
+        eng._gate.set()
+        eng.drain()                     # and still completes once released
+        assert eng.in_flight == 0
+    finally:
+        eng._gate.set()
+        eng.close()
+
+
+def test_torn_write_is_silent_at_the_driver(tmp_path):
+    f = open_file(str(tmp_path / "torn.bin"), 1 << 14, "faulty:buffered",
+                  fault_spec="torn@w0:0.25")
+    try:
+        data = np.full(8192, 0xAB, np.uint8)
+        assert f.pwrite(0, data) == 8192            # reports full success
+        out = np.empty(8192, np.uint8)
+        f.pread_into(0, out)
+        assert (out[:2048] == 0xAB).all()           # only the prefix landed
+        assert (out[2048:] == 0).all()
+        assert f.injected["torn"] == 1
+    finally:
+        f.close()
+
+
+# --------------------------------------------------------------------------- #
+# Checksum sidecar: geometry, round-trip, torn-write detection                 #
+# --------------------------------------------------------------------------- #
+
+def test_span_plan_geometry():
+    chk, rowbytes = 4096, 3 * 4096
+    # One range covering a whole segment: one span, nothing partial.
+    assert span_plan([(0, 4096)], chk, rowbytes) == [(0, 0, [])]
+    # Straddling two segments, both partially.
+    assert span_plan([(2048, 6144)], chk, rowbytes) == [(0, 1, [0, 1])]
+    # Two ranges that jointly cover segment 0 exactly.
+    assert span_plan([(0, 2048), (2048, 4096)], chk, rowbytes) == [(0, 0, [])]
+    # Disjoint segments -> separate spans.
+    assert span_plan([(0, 4096), (8192, 12288)], chk, rowbytes) == [
+        (0, 0, []), (2, 2, [])]
+    # Tail segment shorter than chk counts as covered when fully written.
+    assert span_plan([(8192, 10000)], chk, 10000) == [(2, 2, [])]
+    assert span_plan([], chk, rowbytes) == []
+
+
+@pytest.mark.parametrize("tier", ("memmap", "file"))
+def test_checksum_round_trip_and_flip_a_byte(tmp_path, tier):
+    v, words = 8, 2048                  # rowbytes = 8192: 1 segment/row
+    path = str(tmp_path / "c.bin")
+    cls = MemmapBacking if tier == "memmap" else FileBacking
+    b = cls(v, words, path, checksum=True)
+    try:
+        rng = np.random.default_rng(2)
+        want = rng.integers(0, 2 ** 32, (v, words), dtype=np.uint32)
+        b.write_block(0, v, want)
+        np.testing.assert_array_equal(b.read_block(0, v), want)
+        cols = np.arange(4, 9)
+        patch = np.full((v, 5), 17, np.uint32)
+        b.write_block(0, v, patch, cols=cols)
+        want[:, 4:9] = patch
+        np.testing.assert_array_equal(b.read_block(0, v, cols=cols), patch)
+        b.flush()
+        # Corrupt one byte in the middle of row 3 behind the store's back.
+        with open(path, "r+b") as f:
+            off = 3 * words * 4 + 100
+            f.seek(off)
+            byte = f.read(1)
+            f.seek(off)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        with pytest.raises(IntegrityError) as ei:
+            b.read_block(0, v)
+        assert ei.value.row == 3 and ei.value.seg == 100 // CHECK_BLOCK
+        assert os.path.exists(path + ".crc")
+    finally:
+        if tier == "file":
+            b.close()
+
+
+def test_checksummed_file_backing_detects_injected_torn_write(tmp_path):
+    """The acceptance wiring: a silent torn write under the engine is caught
+    by the sidecar at the next read — not silently merged."""
+    v, words = 4, 2048
+    path = str(tmp_path / "torn.bin")
+    b = FileBacking(v, words, path, io_driver="faulty:buffered",
+                    fault_spec="torn@wb0-8191:0.3", checksum=True)
+    try:
+        data = np.arange(v * words, dtype=np.uint32).reshape(v, words)
+        b.write_block(0, 1, data[:1])   # row 0's write is torn, silently
+        b.write_block(1, v, data[1:])   # outside the fault's byte range
+        with pytest.raises(IntegrityError) as ei:
+            b.read_block(0, v)
+        assert ei.value.row == 0
+        # Rows beyond the fault's byte range still verify.
+        np.testing.assert_array_equal(b.read_block(1, v), data[1:])
+        # recompute_checksums blesses what's actually on disk (resume path:
+        # the recovery layer restores/reruns the torn rows afterwards).
+        b.recompute_checksums()
+        b.read_block(0, v)              # no longer raises
+    finally:
+        b.close()
+
+
+def test_sidecar_adopts_existing_file_and_reuses_itself(tmp_path):
+    v, words = 4, 1024
+    path = str(tmp_path / "a.bin")
+    plain = FileBacking(v, words, path)
+    want = np.arange(v * words, dtype=np.uint32).reshape(v, words)
+    plain.write_block(0, v, want)
+    plain.flush()
+    plain.close()
+    # Adoption: checksums recomputed from the existing contents.
+    b1 = FileBacking(v, words, path, checksum=True)
+    np.testing.assert_array_equal(b1.read_block(0, v), want)
+    b1.flush()
+    b1.close()
+    # Reuse: the sidecar header matches, so it is reopened, not reseeded.
+    sc = ChecksumSidecar(path, v, words * 4)
+    assert not sc.fresh
+    # A fresh backing file seeds zero-CRCs that verify zero reads.
+    b2 = MemmapBacking(v, words, str(tmp_path / "z.bin"), checksum=True)
+    assert (b2.read_block(0, v) == 0).all()
+
+
+def test_sidecar_refuses_unknown_algorithm(tmp_path):
+    path = str(tmp_path / "alg.bin")
+    MemmapBacking(2, 1024, path, checksum=True).flush()
+    with open(path + ".crc", "r+b") as f:
+        f.seek(12)                      # algo field of the header
+        f.write(np.uint32(7).tobytes())  # algorithm id nobody has
+    with pytest.raises(IntegrityError, match="written with"):
+        ChecksumSidecar(path, 2, 4096)
+
+
+def test_ensure_file_size_error_is_actionable(tmp_path):
+    missing = str(tmp_path / "no" / "such" / "dir" / "f.bin")
+    with pytest.raises(OSError, match="cannot create/extend"):
+        ensure_file_size(missing, 4096)
+
+
+# --------------------------------------------------------------------------- #
+# Checkpoint manifest chunk CRCs                                               #
+# --------------------------------------------------------------------------- #
+
+def test_checkpoint_detects_flipped_byte_and_falls_back(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    import json
+    m = CheckpointManager(str(tmp_path / "ckpt"), keep=5)
+    state = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64)}
+    m.save(1, state, blocking=True)
+    m.save(2, {"w": state["w"] * 2}, blocking=True)
+    man = json.load(open(str(tmp_path / "ckpt" / "step_000000000002" /
+                             "manifest.json")))
+    assert man["version"] == 2 and man["arrays"][0]["chunk_crcs"]
+    shard = str(tmp_path / "ckpt" / "step_000000000002" / "arr_00000.npy")
+    with open(shard, "r+b") as f:
+        f.seek(500)
+        byte = f.read(1)
+        f.seek(500)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(IOError, match="checksum mismatch"):
+        m.restore(2, like=state)
+    step, got = m.restore_latest(like=state)    # falls back to step 1
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]), state["w"])
