@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Docs consistency gate (CI `docs` job; no third-party deps, no jax).
+
+Two checks:
+
+1. Every relative markdown link in README.md, ROADMAP.md, and docs/*.md
+   resolves to an existing file (anchors stripped; http(s) links skipped).
+2. Every `PemsConfig` field — read from the dataclass source by AST, so the
+   gate cannot drift from the code — is documented in docs/TUNING.md.
+
+Exit code 0 when both pass; 1 with a per-failure listing otherwise.
+"""
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def iter_md_files():
+    yield ROOT / "README.md"
+    yield ROOT / "ROADMAP.md"
+    yield from sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links():
+    errors = []
+    for md in iter_md_files():
+        text = _CODE_FENCE_RE.sub("", md.read_text())
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                     # pure in-page anchor
+                continue
+            if not (md.parent / path).exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link {target!r}")
+    return errors
+
+
+def pems_config_fields():
+    src = (ROOT / "src/repro/core/executor.py").read_text()
+    tree = ast.parse(src)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "PemsConfig":
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    raise SystemExit("PemsConfig not found in src/repro/core/executor.py")
+
+
+def check_tuning_coverage():
+    fields = pems_config_fields()
+    if not fields:
+        return ["PemsConfig has no annotated fields?"]
+    tuning = (ROOT / "docs/TUNING.md").read_text()
+    return [f"docs/TUNING.md: PemsConfig field `{f}` is undocumented"
+            for f in fields if f"`{f}`" not in tuning]
+
+
+def main():
+    errors = check_links() + check_tuning_coverage()
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        return 1
+    n = len(pems_config_fields())
+    print(f"docs OK: links resolve, all {n} PemsConfig fields covered")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

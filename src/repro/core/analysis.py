@@ -15,7 +15,7 @@ All byte quantities share one unit (bytes); time models are parameterised by
 the EM-BSP coefficients (Appendix B.4): S, G (seconds per block of size B),
 g, l (BSP* network), L (virtual superstep overhead).
 
-Known thesis inconsistency (documented in DESIGN.md §2): Lemma 7.1.8 with
+Known thesis inconsistency: Lemma 7.1.8 with
 ``P = 1`` does **not** reduce to Lemma 7.1.3 because the parallel analysis
 counts all ``v²/P`` network-received deliveries even when every destination is
 local.  The event-level simulation in :mod:`repro.core.collectives` resolves

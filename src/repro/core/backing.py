@@ -35,10 +35,22 @@ import numpy as np
 
 from repro.io import IOEngine, ensure_file_size, open_file
 from repro.io.checksum import ChecksumSidecar, span_plan
+from repro.io.faults import split_shard_clause
 
 from .context import ContextLayout, WORD
 
 TIERS = ("device", "host", "memmap", "file")
+
+
+def shard_row_ranges(m: int, r0: int, r1: int):
+    """Split the global row range ``[r0, r1)`` at ``m``-row shard boundaries.
+
+    Yields ``(p, a, b)`` per overlapped shard ``p`` with ``[a, b)`` the
+    global sub-range it owns — the one row-addressing convention shared by
+    :class:`ShardedBacking`, the executor's per-shard ledger accounting, and
+    the tiered collectives."""
+    for p in range(r0 // m, (r1 - 1) // m + 1):
+        yield p, max(r0, p * m), min(r1, (p + 1) * m)
 
 
 def _np_dtype(dtype) -> np.dtype:
@@ -498,12 +510,169 @@ def _close_quiet(engine, unlink_path: Optional[str]) -> None:
         _unlink_quiet(unlink_path + ".crc")
 
 
-def make_backing(tier: str, v: int, words: int,
+class ShardedBacking:
+    """The parallel disk model (thesis §6.3): ``P`` disjoint ``v/P``-row
+    shards, one per mesh process, each a full backing of its own.
+
+    Every shard owns an aligned, non-overlapping row range ``[p·m, (p+1)·m)``
+    of the global ``[v, words]`` population, backed by its *own* file
+    (``<path>.shard<p>``, or a private temp file when no path is given) —
+    and, on ``tier="file"``, its own :class:`~repro.io.IOEngine` + driver
+    instance, so P processes genuinely drive P disks with P submission
+    queues.  Per-shard ``stats``/``ledger`` objects (``shard_stats``/
+    ``shard_ledgers``) receive each shard's measured traffic, making the
+    vμ/P-per-disk accounting of the thesis directly observable.
+
+    The block API is the same as every other backing: ``read_block``/
+    ``write_block`` accept *global* row ranges and split them at shard
+    boundaries (the executor's k-row round blocks never straddle one —
+    ``(v/P) % k == 0`` is validated at config time — but collectives'
+    whole-population reads do, and are concatenated transparently).
+
+    Fault injection composes with sharding: a ``fault_spec`` carrying a
+    ``shard=N`` clause is applied only to shard ``N``'s driver; the other
+    shards run the clean inner driver — the single-disk-failure model the
+    per-process recovery path is built for.  There is deliberately no
+    ``arr`` view of the whole population: cross-shard access must go through
+    the block API so per-shard accounting cannot be bypassed.
+    """
+
+    def __init__(self, tier: str, v: int, words: int, nshards: int,
                  path: Optional[str] = None, *,
                  io_driver: Optional[str] = None, io_queue_depth: int = 8,
-                 stats=None, ledger=None, checksum: bool = False,
+                 shard_stats=None, shard_ledgers=None, checksum: bool = False,
                  fault_spec: Optional[str] = None, io_retries: int = 2,
                  io_backoff_s: float = 0.002):
+        if tier not in ("host", "memmap", "file"):
+            raise ValueError(f"cannot shard tier {tier!r}")
+        if nshards < 1 or v % nshards:
+            raise ValueError(
+                f"v={v} must divide into nshards={nshards} equal row shards")
+        self.tier = tier
+        self.v = v
+        self.words = words
+        self.rowbytes = words * WORD
+        self.P = nshards
+        self.m = v // nshards
+        self.path = path
+        target, spec = split_shard_clause(fault_spec)
+        if target is not None and target >= nshards:
+            raise ValueError(
+                f"fault_spec targets shard {target} but only "
+                f"{nshards} shards exist")
+        self.shards = []
+        for p in range(nshards):
+            sp = None if path is None else f"{path}.shard{p}"
+            drv, fs = io_driver, None
+            if (io_driver or "").startswith("faulty:"):
+                if target is None or target == p:
+                    fs = spec or None
+                else:
+                    # Healthy shards run the clean inner driver: one disk
+                    # fails, the other P-1 never see the injector at all.
+                    drv = io_driver.split(":", 1)[1]
+            self.shards.append(make_backing(
+                tier, self.m, words, sp, io_driver=drv,
+                io_queue_depth=io_queue_depth,
+                stats=None if shard_stats is None else shard_stats[p],
+                ledger=None if shard_ledgers is None else shard_ledgers[p],
+                checksum=checksum, fault_spec=fs,
+                io_retries=io_retries, io_backoff_s=io_backoff_s))
+            eng = getattr(self.shards[p], "engine", None)
+            if eng is not None:
+                eng.name = f"shard{p}"
+        self.disk = self.shards[0].disk
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.shards)
+
+    @property
+    def checksum(self):
+        """Per-shard sidecars as a tuple, or None when no shard is
+        checksummed (truthiness matches the single-backing convention)."""
+        cs = tuple(s.checksum for s in self.shards)
+        return cs if any(c is not None for c in cs) else None
+
+    # ------------------------------------------------------------- block API
+    def read_block(self, r0: int, r1: int, cols=None) -> np.ndarray:
+        """Global rows ``[r0, r1)``, concatenated across shard boundaries."""
+        parts = [
+            self.shards[p].read_block(a - p * self.m, b - p * self.m, cols)
+            for p, a, b in shard_row_ranges(self.m, r0, r1)
+        ]
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+    def write_block(self, r0: int, r1: int, value, cols=None,
+                    wait: bool = True) -> None:
+        """Write global rows ``[r0, r1)``; ``value`` may broadcast along
+        rows (a ``[1, n]`` block lands in every row, as for bcast)."""
+        val = np.asarray(value)
+        bcast = val.ndim < 2 or val.shape[0] == 1
+        for p, a, b in shard_row_ranges(self.m, r0, r1):
+            sub = val if bcast else val[a - r0:b - r0]
+            self.shards[p].write_block(a - p * self.m, b - p * self.m, sub,
+                                       cols, wait=wait)
+
+    def drain(self) -> None:
+        for s in self.shards:
+            s.drain()
+
+    def drain_shard(self, p: int) -> None:
+        self.shards[p].drain()
+
+    def flush(self) -> None:
+        for s in self.shards:
+            s.flush()
+
+    def flush_shard(self, p: int) -> None:
+        """Durability for one shard only — the per-process recovery commit
+        (a stage run with ``procs=[p]`` writes nothing outside shard p)."""
+        self.shards[p].flush()
+
+    def recompute_checksums(self, shard: Optional[int] = None) -> None:
+        """Re-bless CRCs from the bytes on disk — all shards, or just one
+        (per-process recovery touches only the failed shard's sidecar)."""
+        targets = self.shards if shard is None else [self.shards[shard]]
+        for s in targets:
+            if s.checksum is not None:
+                s.recompute_checksums()
+
+    def close(self) -> None:
+        for s in self.shards:
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+
+def make_backing(tier: str, v: int, words: int,
+                 path: Optional[str] = None, *,
+                 P: int = 1,
+                 io_driver: Optional[str] = None, io_queue_depth: int = 8,
+                 stats=None, ledger=None,
+                 shard_stats=None, shard_ledgers=None,
+                 checksum: bool = False,
+                 fault_spec: Optional[str] = None, io_retries: int = 2,
+                 io_backoff_s: float = 2e-3):
+    """Construct a backing for ``v`` rows of ``words`` uint32 words.
+
+    ``P > 1`` returns a :class:`ShardedBacking` — one inner backing (and on
+    the file tier one engine) per process, billing ``shard_stats[p]`` /
+    ``shard_ledgers[p]``.  ``P == 1`` returns the plain single backing,
+    billing ``stats``/``ledger``; a leading ``shard=`` clause in
+    ``fault_spec`` is stripped (there is only one shard to target)."""
+    if tier == "device":
+        raise ValueError("tier='device' has no backing store")
+    if P > 1:
+        return ShardedBacking(tier, v, words, P, path,
+                              io_driver=io_driver,
+                              io_queue_depth=io_queue_depth,
+                              shard_stats=shard_stats,
+                              shard_ledgers=shard_ledgers,
+                              checksum=checksum, fault_spec=fault_spec,
+                              io_retries=io_retries,
+                              io_backoff_s=io_backoff_s)
+    _, fault_spec = split_shard_clause(fault_spec)
     if tier == "host":
         return HostBacking(v, words)
     if tier == "memmap":
@@ -513,7 +682,8 @@ def make_backing(tier: str, v: int, words: int,
                            io_driver=io_driver or "buffered",
                            io_queue_depth=io_queue_depth,
                            stats=stats, ledger=ledger, checksum=checksum,
-                           fault_spec=fault_spec, io_retries=io_retries,
+                           fault_spec=fault_spec or None,
+                           io_retries=io_retries,
                            io_backoff_s=io_backoff_s)
     raise ValueError(f"unknown backing tier {tier!r} (choose from {TIERS})")
 
@@ -532,13 +702,18 @@ class TieredStore:
     every ``field``/``with_field`` on a disk-resident backing (``memmap``
     and ``file`` alike) records the measured disk traffic — one count per
     physical access, including the initial data load; callers touching the
-    backing's block API directly account for themselves.
+    backing's block API directly account for themselves.  Under a
+    :class:`ShardedBacking` pass ``shard_ledgers`` as well: field traffic is
+    then split at shard boundaries and billed to the owning shard's ledger,
+    so per-shard ``disk_read/write_bytes`` sum to the ``P == 1`` totals.
     """
 
-    def __init__(self, layout: ContextLayout, backing, ledger=None):
+    def __init__(self, layout: ContextLayout, backing, ledger=None,
+                 shard_ledgers=None):
         self.layout = layout
         self.backing = backing
         self.ledger = ledger
+        self.shard_ledgers = shard_ledgers
 
     # convenience -----------------------------------------------------------
     @property
@@ -565,29 +740,58 @@ class TieredStore:
     def mu_bytes(self) -> int:
         return self.layout.mu_bytes
 
+    # accounting ------------------------------------------------------------
+    def _account(self, r0: int, r1: int, row_bytes: int, write: bool) -> None:
+        """Bill ``(r1-r0)·row_bytes`` of field traffic to the owning
+        ledger(s): the single ledger at ``P == 1``; split at shard
+        boundaries to ``shard_ledgers[p]`` under a sharded backing."""
+        if not self.on_disk:
+            return
+        if self.shard_ledgers is not None and hasattr(self.backing, "m"):
+            for p, a, b in shard_row_ranges(self.backing.m, r0, r1):
+                led = self.shard_ledgers[p]
+                if led is not None:
+                    (led.add_disk_write if write
+                     else led.add_disk_read)((b - a) * row_bytes)
+            return
+        if self.ledger is not None:
+            (self.ledger.add_disk_write if write
+             else self.ledger.add_disk_read)((r1 - r0) * row_bytes)
+
     # field access ----------------------------------------------------------
     def field(self, name: str) -> np.ndarray:
         """Gather a field across all contexts → ``[v, *shape]`` (a host copy,
         matching the device store's functional reads)."""
+        return self.field_rows(name, 0, self.v)
+
+    def field_rows(self, name: str, r0: int, r1: int) -> np.ndarray:
+        """Gather a field for contexts ``[r0, r1)`` only → ``[r1-r0, *shape]``
+        — the per-process collectives read one shard's rows this way."""
         off = self.layout.offset(name)
         f = self.layout.field(name)
-        w = self.backing.read_block(0, self.v, cols=slice(off, off + f.words))
-        if self.ledger is not None and self.on_disk:
-            self.ledger.add_disk_read(w.nbytes)
-        return w.view(_np_dtype(f.dtype)).reshape((self.v,) + f.shape)
+        w = self.backing.read_block(r0, r1, cols=slice(off, off + f.words))
+        self._account(r0, r1, f.words * WORD, write=False)
+        return w.view(_np_dtype(f.dtype)).reshape((r1 - r0,) + f.shape)
 
     def with_field(self, name: str, value) -> "TieredStore":
         """Write a field across all contexts (in place; returns ``self``)."""
+        return self.with_field_rows(name, 0, value, rows=self.v)
+
+    def with_field_rows(self, name: str, r0: int, value,
+                        rows: Optional[int] = None) -> "TieredStore":
+        """Write a field for contexts ``[r0, r0+rows)`` (in place; returns
+        ``self``).  ``rows`` defaults to ``value``'s leading dimension."""
         off = self.layout.offset(name)
         f = self.layout.field(name)
         value = np.asarray(value)
         if value.dtype != _np_dtype(f.dtype):
             value = value.astype(_np_dtype(f.dtype))
-        w = np.ascontiguousarray(value).reshape(self.v, f.words)
-        self.backing.write_block(0, self.v, w.view(np.uint32),
+        if rows is None:
+            rows = value.reshape(-1, f.words).shape[0] if f.words else 0
+        w = np.ascontiguousarray(value).reshape(rows, f.words)
+        self.backing.write_block(r0, r0 + rows, w.view(np.uint32),
                                  cols=slice(off, off + f.words))
-        if self.ledger is not None and self.on_disk:
-            self.ledger.add_disk_write(w.nbytes)
+        self._account(r0, r0 + rows, f.words * WORD, write=True)
         return self
 
     def field_bytes(self, name: str) -> int:

@@ -82,18 +82,39 @@ def alltoallv(
     mode: str = "direct",
     fill=None,
     use_kernel: bool = True,
+    procs: Optional[list] = None,
 ) -> ContextStore:
     """Every VP ρ sends message ``send[d]`` to VP d; after the call VP ρ holds
     ``recv[s] =`` (s's message to ρ) and transposed counts.
 
-    ``fill`` (optional, requires counts) fuses the receiver's boundary mask
-    into delivery: lanes past ``send_counts[ρ][d]`` arrive as ``fill``
-    instead of whatever padding the sender left.  ``use_kernel=False`` keeps
-    the seed's dense-transpose implementation (bit-identical, for
-    equivalence testing); the ledger is unaffected by either knob.
+    ``send``/``recv`` name ``[v, ω]`` layout fields (``ω`` the per-message
+    payload; all byte math below is ``ω`` words × 4 bytes).  ``fill``
+    (optional, requires counts) fuses the receiver's boundary mask into
+    delivery: lanes past ``send_counts[ρ][d]`` arrive as ``fill`` instead of
+    whatever padding the sender left.  ``use_kernel=False`` keeps the seed's
+    dense-transpose implementation (bit-identical, for equivalence testing);
+    the ledger is unaffected by either knob.
+
+    Sharding/mesh semantics: on the device tier with ``P > 1`` the network
+    phase runs over the jax mesh (α-chunked ``lax.all_to_all``, Alg 7.1.3).
+    On a backing tier the collective is host-side data movement over the
+    (possibly sharded) backing: each destination shard's recv rows are
+    staged through a bounded host buffer and written back to that shard
+    only, with measured disk bytes billed to the owning shard's ledger.
+    ``procs`` (tiered stores only) restricts the *destination* side to the
+    listed processes' shards — sources are still read from every shard, but
+    nothing outside the listed shards is written (per-process recovery).
+    In-place shuffles (``send == recv``) are not per-process recoverable:
+    a rerun would re-read already-shuffled source rows.
+
+    Raises ``ValueError`` for unknown ``mode``, mismatched field shapes,
+    ``fill`` without counts, ``procs`` on a device store, or a staging
+    chunk that cannot fit ``device_cap_bytes``.
     """
     if mode not in ("direct", "indirect"):
         raise ValueError(f"unknown mode {mode!r}")
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     cfg = self.cfg
     f = store.layout.field(send)
     if store.layout.field(recv).shape != f.shape:
@@ -112,7 +133,7 @@ def alltoallv(
 
     if isinstance(store, TieredStore):
         store = _alltoallv_host(self, store, send, recv,
-                                send_counts, recv_counts, fill)
+                                send_counts, recv_counts, fill, procs)
     elif mode == "direct" and use_kernel:
         if cfg.P == 1:
             store = _alltoallv_fused(self, store, send, recv,
@@ -388,36 +409,44 @@ def _alltoallv_dense(self, store, send, recv, send_counts, recv_counts,
     return store
 
 
-def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
+def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill,
+                    procs=None):
     """Backing-tier Alltoallv: pure host-side data movement over the
     host/memmap store — messages move straight between context rows of the
     backing array, the closest real-world analogue of the thesis writing
     each message directly into the destination context on disk.  Bit-
     identical to the device paths (copies only, no arithmetic).
 
-    The staging is chunked *by destination* (the α knob, Alg 7.1.3 applied
-    host-side): each chunk stages ``[αd, v, ω]`` — every source's messages
-    for αd destination contexts — masks it in place, and writes it straight
-    into those destinations' recv word ranges.  ``device_cap_bytes`` (the
-    memory budget the backing tier exists to honour) bounds the staging
-    buffer: αd is clamped so the chunk fits, instead of materializing the
-    dense ``[v, v, ω]`` matrix the tier cannot afford.  An in-place shuffle
+    The staging is chunked *per destination process, then by α* (the α knob,
+    Alg 7.1.3 applied host-side): each chunk stages ``[αd, v, ω]`` — every
+    source's messages for αd of process p's destination contexts — masks it
+    in place, and writes it straight into those destinations' recv word
+    ranges, which live entirely in shard p.  This is the per-process host
+    buffer of the parallel disk model: sources are read from every shard
+    (and billed to each source shard's ledger), but each chunk writes one
+    destination shard only, so a ``procs`` subset re-runs without touching
+    the other shards' bytes.  ``device_cap_bytes`` (the memory budget the
+    backing tier exists to honour) bounds the staging buffer *per process*:
+    αd is clamped so the chunk fits, instead of materializing the dense
+    ``[v, v, ω]`` matrix the tier cannot afford.  An in-place shuffle
     (``send == recv``) additionally snapshots the whole field — a chunked
     in-place transpose would read rows it has already overwritten — and
     raises when snapshot + chunk cannot fit the cap."""
     cfg = self.cfg
-    v = cfg.v
+    v, m = cfg.v, cfg.v_local
     lo = store.layout
     bk = store.backing
     # Array-addressable backings (host/memmap) stage straight from a view;
-    # the engine-backed file tier reads its chunk through the block API.
-    # Checksummed backings also take the block API so every staged byte is
-    # CRC-verified — a raw view would bypass torn-write detection.
+    # the engine-backed file tier — and the sharded backing, which has no
+    # whole-population array by design — reads its chunk through the block
+    # API.  Checksummed backings also take the block API so every staged
+    # byte is CRC-verified — a raw view would bypass torn-write detection.
     arr = (None if getattr(bk, "checksum", None) is not None
            else getattr(bk, "arr", None))
     disk = store.on_disk
     ww = lo.field_words(send) // v                 # ω in store words
     off_s, off_r = lo.offset(send), lo.offset(recv)
+    procs = list(range(cfg.P)) if procs is None else list(procs)
 
     Ct = None
     if send_counts is not None and recv_counts is not None:
@@ -426,7 +455,7 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
     if fill is not None:
         fill_word = _fill_word(fill, lo.field(send).dtype)
 
-    alpha = v if cfg.alpha is None else cfg.alpha
+    alpha = m if cfg.alpha is None else cfg.alpha
     # Host/memmap chunks are sliced as views; the engine-backed file tier's
     # read_block returns a *copy* the same size as the staging buffer, so a
     # chunk there holds 2x its column bytes resident (copy + blk).  The
@@ -462,37 +491,43 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill):
             )
         full = bk.read_block(0, v, cols=slice(off_s, off_s + v * ww))
         if disk:
-            self.ledger.add_disk_read(full.nbytes)
+            self._account_disk(0, v, v * ww * WORD, write=False)
 
-    stats = self.tier_stats
-    for c0 in range(0, v, alpha):
-        c1 = min(c0 + alpha, v)
-        if full is not None:
-            cols = full[:, c0 * ww:c1 * ww]
-        elif arr is not None:
-            cols = arr[:, off_s + c0 * ww:off_s + c1 * ww]
-        else:
-            cols = bk.read_block(
-                0, v, cols=slice(off_s + c0 * ww, off_s + c1 * ww))
-        blk = _np.empty((c1 - c0, v, ww), _np.uint32)   # the staging buffer
-        blk[...] = _np.swapaxes(cols.reshape(v, c1 - c0, ww), 0, 1)
-        if disk and full is None:
-            self.ledger.add_disk_read(blk.nbytes)
-        stats.peak_stage_bytes = max(
-            stats.peak_stage_bytes,
-            chunk_copies * blk.nbytes
-            + (full.nbytes if full is not None else 0),
-        )
-        if fill is not None:
-            lane = _np.arange(ww)[None, None, :]
-            _np.copyto(blk, fill_word,
-                       where=lane >= Ct[c0:c1, :, None].astype(_np.int64))
-        bk.write_block(c0, c1, blk.reshape(c1 - c0, v * ww),
-                       cols=slice(off_r, off_r + v * ww))
-        if disk:
-            self.ledger.add_disk_write(blk.nbytes)
+    for p in procs:
+        stats = self.shard_stats[p]
+        for c0 in range(p * m, (p + 1) * m, alpha):
+            c1 = min(c0 + alpha, (p + 1) * m)
+            if full is not None:
+                cols = full[:, c0 * ww:c1 * ww]
+            elif arr is not None:
+                cols = arr[:, off_s + c0 * ww:off_s + c1 * ww]
+            else:
+                cols = bk.read_block(
+                    0, v, cols=slice(off_s + c0 * ww, off_s + c1 * ww))
+            blk = _np.empty((c1 - c0, v, ww), _np.uint32)  # staging buffer
+            blk[...] = _np.swapaxes(cols.reshape(v, c1 - c0, ww), 0, 1)
+            if disk and full is None:
+                # The chunk reads (c1-c0)·ω columns of every source row —
+                # split across the source shards' ledgers.
+                self._account_disk(0, v, (c1 - c0) * ww * WORD, write=False)
+            stats.peak_stage_bytes = max(
+                stats.peak_stage_bytes,
+                chunk_copies * blk.nbytes
+                + (full.nbytes if full is not None else 0),
+            )
+            if fill is not None:
+                lane = _np.arange(ww)[None, None, :]
+                _np.copyto(blk, fill_word,
+                           where=lane >= Ct[c0:c1, :, None].astype(_np.int64))
+            bk.write_block(c0, c1, blk.reshape(c1 - c0, v * ww),
+                           cols=slice(off_r, off_r + v * ww))
+            if disk:
+                # The writes land entirely in destination shard p.
+                self._account_disk(c0, c1, v * ww * WORD, write=True)
     if Ct is not None:
-        store.with_field(recv_counts, Ct.astype(lo.field(recv_counts).dtype))
+        ct = Ct.astype(lo.field(recv_counts).dtype)
+        for p in procs:
+            store.with_field_rows(recv_counts, p * m, ct[p * m:(p + 1) * m])
     return store
 
 
@@ -580,20 +615,30 @@ def _ledger_alltoallv(self, omega_b: int, mode: str) -> None:
 # collectives, the ledger carries the thesis' worst-case EM terms.             #
 # --------------------------------------------------------------------------- #
 
-def bcast(self, store: ContextStore, field: str, root: int = 0) -> ContextStore:
-    """EM-Bcast (Alg 7.2.1): root's field value lands in every context."""
+def bcast(self, store: ContextStore, field: str, root: int = 0,
+          procs=None) -> ContextStore:
+    """EM-Bcast (Alg 7.2.1): root's field value lands in every context.
+
+    On a tiered store ``procs`` restricts the write side to the listed
+    processes' shards (the root row is read wherever it lives)."""
     cfg = self.cfg
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     if isinstance(store, TieredStore):
         # Read only the root context's field range off the backing store.
+        m = cfg.v_local
         off = store.layout.offset(field)
         nw = store.layout.field_words(field)
         row = store.backing.read_block(root, root + 1,
                                        cols=slice(off, off + nw))
-        store.backing.write_block(0, store.v, row,   # [1, nw] → every row
-                                  cols=slice(off, off + nw))
         if store.on_disk:
-            self.ledger.add_disk_read(row.nbytes)
-            self.ledger.add_disk_write(store.v * row.nbytes)
+            self._account_disk(root, root + 1, row.nbytes, write=False)
+        for p in (range(cfg.P) if procs is None else procs):
+            store.backing.write_block(p * m, (p + 1) * m, row,  # every row
+                                      cols=slice(off, off + nw))
+            if store.on_disk:
+                self._account_disk(p * m, (p + 1) * m, row.nbytes,
+                                   write=True)
     else:
         vals = store.field(field)              # [v, ...]
         val = lax.dynamic_index_in_dim(vals, root, axis=0, keepdims=False)
@@ -614,24 +659,31 @@ def bcast(self, store: ContextStore, field: str, root: int = 0) -> ContextStore:
     return store
 
 
-def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
-           ) -> ContextStore:
+def gather(self, store: ContextStore, send: str, recv: str, root: int = 0,
+           procs=None) -> ContextStore:
     """EM-Gather (Alg 7.3.1): every VP's ``send`` ([ω]) lands in the root's
-    ``recv`` ([v, ω]).  Non-root recv fields are left untouched."""
+    ``recv`` ([v, ω]).  Non-root recv fields are left untouched.
+
+    On a tiered store ``procs`` restricts the write side: the root row is
+    only written when its shard (``root // (v/P)``) is listed."""
     cfg = self.cfg
     fs = store.layout.field(send)
     fr = store.layout.field(recv)
     if fr.shape != (cfg.v,) + fs.shape:
         raise ValueError(f"recv must be [v, *send.shape]; got {fr.shape}")
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     if isinstance(store, TieredStore):
         A = store.field(send)                  # host copy [v, ...]
         w = _np.ascontiguousarray(A.astype(_np.dtype(fr.dtype))).reshape(-1)
         off = store.layout.offset(recv)
         # Only the root context's recv range is touched on the backing store.
-        store.backing.write_block(root, root + 1, w.view(_np.uint32)[None],
-                                  cols=slice(off, off + w.size))
-        if store.on_disk:
-            self.ledger.add_disk_write(w.nbytes)
+        if procs is None or root // cfg.v_local in procs:
+            store.backing.write_block(root, root + 1,
+                                      w.view(_np.uint32)[None],
+                                      cols=slice(off, off + w.size))
+            if store.on_disk:
+                self._account_disk(root, root + 1, w.nbytes, write=True)
     else:
         A = store.field(send)                  # [v, ...] gathered result
         R = store.field(recv)                  # [v, v, ...]
@@ -650,23 +702,32 @@ def gather(self, store: ContextStore, send: str, recv: str, root: int = 0
     return store
 
 
-def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
-    """Every VP receives every VP's ``send`` into ``recv`` ([v, ω])."""
+def allgather(self, store: ContextStore, send: str, recv: str,
+              procs=None) -> ContextStore:
+    """Every VP receives every VP's ``send`` into ``recv`` ([v, ω]).
+
+    On a tiered store ``procs`` restricts the write side to the listed
+    processes' shards (sources are read from every shard)."""
     cfg = self.cfg
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     if isinstance(store, TieredStore):
         # Stage only the gathered [v, ω] row (every receiver gets the same
-        # bytes) and write it per destination row — never the dense
+        # bytes) and write it per destination shard — never the dense
         # [v, v·ω] broadcast the tier cannot afford.
+        m = cfg.v_local
         A = store.field(send)                  # host copy [v, ...]
         w = _np.ascontiguousarray(
             A.astype(_np.dtype(store.layout.field(recv).dtype))).reshape(-1)
         off = store.layout.offset(recv)
-        store.backing.write_block(0, cfg.v, w.view(_np.uint32)[None],
-                                  cols=slice(off, off + w.size))
-        if store.on_disk:
-            self.ledger.add_disk_write(cfg.v * w.nbytes)
-        self.tier_stats.peak_stage_bytes = max(
-            self.tier_stats.peak_stage_bytes, w.nbytes)
+        for p in (range(cfg.P) if procs is None else procs):
+            store.backing.write_block(p * m, (p + 1) * m,
+                                      w.view(_np.uint32)[None],
+                                      cols=slice(off, off + w.size))
+            if store.on_disk:
+                self._account_disk(p * m, (p + 1) * m, w.nbytes, write=True)
+            st = self.shard_stats[p]
+            st.peak_stage_bytes = max(st.peak_stage_bytes, w.nbytes)
     else:
         A = store.field(send)                  # [v, ...]
         out = jnp.broadcast_to(
@@ -679,19 +740,25 @@ def allgather(self, store: ContextStore, send: str, recv: str) -> ContextStore:
 
 
 def reduce(self, store: ContextStore, field: str, out_field: str,
-           op: str = "add", root: int = 0) -> ContextStore:
+           op: str = "add", root: int = 0, procs=None) -> ContextStore:
     """EM-Reduce (Alg 7.4.1): vectorised reduction of each VP's ``field``
-    ([n]) into the root's ``out_field`` ([n])."""
+    ([n]) into the root's ``out_field`` ([n]).
+
+    On a tiered store ``procs`` gates the root write like :func:`gather`."""
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     if isinstance(store, TieredStore):
         red = _tiered_reduce(self, store, field, op)
         fr = store.layout.field(out_field)
         w = _np.ascontiguousarray(
             red.astype(_np.dtype(fr.dtype))).reshape(-1)
         off = store.layout.offset(out_field)
-        store.backing.write_block(root, root + 1, w.view(_np.uint32)[None],
-                                  cols=slice(off, off + w.size))
-        if store.on_disk:
-            self.ledger.add_disk_write(w.nbytes)
+        if procs is None or root // self.cfg.v_local in procs:
+            store.backing.write_block(root, root + 1,
+                                      w.view(_np.uint32)[None],
+                                      cols=slice(off, off + w.size))
+            if store.on_disk:
+                self._account_disk(root, root + 1, w.nbytes, write=True)
     else:
         vals = store.field(field)              # [v, n]
         red = _reduce_op(op)(vals)
@@ -703,14 +770,16 @@ def reduce(self, store: ContextStore, field: str, out_field: str,
 
 
 def allreduce(self, store: ContextStore, field: str, out_field: str,
-              op: str = "add") -> ContextStore:
+              op: str = "add", procs=None) -> ContextStore:
+    if procs is not None and not isinstance(store, TieredStore):
+        raise ValueError("procs= requires a backing-tier store")
     if isinstance(store, TieredStore):
+        m = self.cfg.v_local
         red = _tiered_reduce(self, store, field, op)
-        out = _np.broadcast_to(red[None], (store.v,) + red.shape)
-        store.with_field(
-            out_field,
-            out.astype(_np.dtype(store.layout.field(out_field).dtype)),
-        )
+        out = _np.broadcast_to(red[None], (m,) + red.shape).astype(
+            _np.dtype(store.layout.field(out_field).dtype))
+        for p in (range(self.cfg.P) if procs is None else procs):
+            store.with_field_rows(out_field, p * m, out)
     else:
         vals = store.field(field)
         red = _reduce_op(op)(vals)

@@ -75,7 +75,53 @@ def _shard_map():
 
 @dataclasses.dataclass
 class PemsConfig:
-    """Simulation parameters (thesis Appendix B.3)."""
+    """Simulation parameters (thesis Appendix B.3).
+
+    Every knob is documented at length in ``docs/TUNING.md``; the short
+    version:
+
+    * ``v``/``k``/``P`` — total virtual processors, concurrently-resident
+      contexts per real processor, and real processors.  ``v`` must divide
+      by ``P`` and ``v/P`` by ``k``; each real processor simulates its
+      ``v/P`` contexts in ``v/(P·k)`` ID-ordered rounds (§6.5).
+    * ``driver`` — round swap strategy: ``explicit`` (full live context),
+      ``sliced`` (declared fields only), ``async`` (double-buffered
+      prefetch, §5.1).  Bit-identical results; different bytes/schedule.
+    * ``tier`` — where the ``[v, words]`` population lives: ``device``
+      (resident, whole-program jit), ``host`` (RAM), ``memmap`` (disk via
+      ``np.memmap``), ``file`` (disk via the :mod:`repro.io` engine).  With
+      ``P > 1`` on a non-device tier the backing is **sharded**: each
+      process owns rows ``[p·v/P, (p+1)·v/P)`` in its own backing file
+      (``backing_path + ".shard<p>"``) with its own engine and its own
+      ``pems.shard_ledgers[p]``/``shard_stats[p]`` accounting — the full
+      parallel disk model (§6.3), no mesh required.
+    * ``alpha`` — Alltoallv chunk: how many destination contexts are staged
+      or shipped at once (Alg 7.1.3), ``1 <= alpha <= v/P`` or ``None`` for
+      unchunked.  Bounds the staging buffer per Lemma 7.1.9.
+    * ``block_bytes`` — B, the *modeled* ledger block size (bytes).
+    * ``device_cap_bytes`` — device-memory budget (bytes) for resident
+      contexts + collective staging; construction fails if the config
+      cannot fit, and tiered collectives clamp their chunks under it.
+    * ``backing_path`` — disk tiers: backing file location (created
+      sparse at ``v·μ`` bytes; existing contents are reused, never zeroed).
+    * ``io_driver``/``io_queue_depth``/``io_retries``/``io_backoff_s`` —
+      file tier only: positional-I/O driver (``buffered``/``odirect``/
+      ``mmap``, or ``"faulty:<inner>"`` to inject faults), bounded
+      in-flight requests, transient-error retries per request, and base
+      backoff seconds (doubles per retry).
+    * ``fault_spec`` — what the faulty driver injects (grammar in
+      :mod:`repro.io.faults`).  A ``shard=N`` clause (requires
+      ``0 <= N < P``) targets one shard's driver only — the
+      single-disk-failure model.
+    * ``checksums`` — disk tiers: per-64KiB-segment CRC sidecars on the
+      backing, verified on every read (torn-write detection).
+
+    Raises ``ValueError`` at construction for any invalid combination —
+    unknown names, out-of-range ``alpha``, ``io_*`` knobs without
+    ``tier="file"``, ``fault_spec`` without a faulty driver or targeting a
+    shard ``>= P``, ``checksums`` on a non-disk tier, or indivisible
+    ``v``/``P``/``k``.
+    """
 
     v: int                      # total virtual processors
     k: int = 1                  # concurrently-resident contexts per real proc
@@ -127,8 +173,14 @@ class PemsConfig:
                     f"tier='file' (got io_driver={self.io_driver!r}, "
                     f"tier={self.tier!r})"
                 )
-            from repro.io.faults import FaultSpec
-            FaultSpec.parse(self.fault_spec)   # syntax errors fail here
+            from repro.io.faults import FaultSpec, split_shard_clause
+            shard, rest = split_shard_clause(self.fault_spec)
+            if shard is not None and shard >= self.P:
+                raise ValueError(
+                    f"fault_spec targets shard {shard} but P={self.P} "
+                    f"(shard indices are 0..P-1)"
+                )
+            FaultSpec.parse(rest)   # syntax errors fail here
         if self.checksums and self.tier not in ("memmap", "file"):
             raise ValueError(
                 f"checksums=True requires a disk tier ('memmap' or 'file'), "
@@ -170,12 +222,6 @@ class PemsConfig:
                     f"{self.v_local} (alpha=None means unchunked, one "
                     "chunk of v/P destinations)"
                 )
-        if self.tier != "device" and self.P > 1:
-            raise ValueError(
-                "backing tiers currently require P == 1 (the P > 1 mesh path "
-                "is device-resident; see ROADMAP open items)"
-            )
-
     @property
     def v_local(self) -> int:
         return self.v // self.P
@@ -196,11 +242,23 @@ class Pems:
         self.mesh = mesh
         self.ledger = IOLedger()
         self.tier_stats = TierStats()
+        # Per-process accounting (the parallel disk model, §6.3).  At
+        # P == 1 the shard lists alias the main ledger/stats, so existing
+        # single-process call sites see identical numbers either way; at
+        # P > 1 each shard's backing bills its own entry and
+        # merged_shard_ledger() recovers the P == 1 totals.
+        if cfg.P == 1 or cfg.tier == "device":
+            self.shard_ledgers = [self.ledger]
+            self.shard_stats = [self.tier_stats]
+        else:
+            self.shard_ledgers = [IOLedger() for _ in range(cfg.P)]
+            self.shard_stats = [TierStats() for _ in range(cfg.P)]
         self.backing = None   # last backing this executor created (tiered)
-        self.cursor = None    # optional durable SuperstepCursor: when set,
-                              # _run_tiered notes round progress on it
-        if cfg.P > 1 and mesh is None:
-            raise ValueError("P > 1 requires a mesh with the vp axis")
+        self.cursors = None   # optional per-process durable SuperstepCursors:
+                              # when set, _run_tiered notes round progress
+        if cfg.P > 1 and cfg.tier == "device" and mesh is None:
+            raise ValueError("P > 1 requires a mesh with the vp axis "
+                             "(device tier; backing tiers shard instead)")
         if mesh is not None and mesh.shape[cfg.vp_axis] != cfg.P:
             raise ValueError(
                 f"mesh axis {cfg.vp_axis}={mesh.shape[cfg.vp_axis]} != P={cfg.P}"
@@ -224,6 +282,51 @@ class Pems:
                 )
         # PEMS2 disk requirement: exactly vμ/P per real processor (§6.3).
         self.ledger.require_disk(cfg.v * layout.mu_bytes // cfg.P)
+        for led in self.shard_ledgers:
+            led.require_disk(cfg.v * layout.mu_bytes // cfg.P)
+
+    # ------------------------------------------------------ per-process views
+    @property
+    def cursor(self):
+        """The single-process durable cursor (process 0's at ``P > 1``).
+        Assigning a cursor here wraps it as a one-element ``cursors`` list —
+        the pre-sharding call sites keep working unchanged."""
+        return self.cursors[0] if self.cursors else None
+
+    @cursor.setter
+    def cursor(self, cur):
+        self.cursors = None if cur is None else [cur]
+
+    def merged_shard_ledger(self) -> IOLedger:
+        """Sum of the per-shard ledgers — equals the ``P == 1`` ledger's
+        measured counters for the same workload (the sharding invariant the
+        tier-1 tests pin)."""
+        out = IOLedger()
+        for led in self.shard_ledgers:
+            out = out.merge(led)
+        return out
+
+    def merged_shard_stats(self) -> TierStats:
+        out = TierStats()
+        for st in self.shard_stats:
+            out = out.merge(st)
+        return out
+
+    def _account_disk(self, r0: int, r1: int, row_bytes: int,
+                      write: bool) -> None:
+        """Bill measured disk traffic for global rows ``[r0, r1)`` to the
+        owning shard ledger(s) — the single main ledger at ``P == 1``."""
+        from .backing import shard_row_ranges
+        if len(self.shard_ledgers) == 1:
+            led = self.shard_ledgers[0]
+            (led.add_disk_write if write
+             else led.add_disk_read)((r1 - r0) * row_bytes)
+            return
+        m = self.cfg.v_local
+        for p, a, b in shard_row_ranges(m, r0, r1):
+            led = self.shard_ledgers[p]
+            (led.add_disk_write if write
+             else led.add_disk_read)((b - a) * row_bytes)
 
     # ------------------------------------------------------------------ setup
     def init(self, init_fn=None, tier: Optional[str] = None,
@@ -250,15 +353,19 @@ class Pems:
                      backing_path: Optional[str]) -> TieredStore:
         cfg, lo = self.cfg, self.layout
         backing = make_backing(tier, cfg.v, lo.words, backing_path,
+                               P=cfg.P,
                                io_driver=cfg.io_driver,
                                io_queue_depth=cfg.io_queue_depth,
                                stats=self.tier_stats, ledger=self.ledger,
+                               shard_stats=self.shard_stats,
+                               shard_ledgers=self.shard_ledgers,
                                checksum=cfg.checksums,
                                fault_spec=cfg.fault_spec,
                                io_retries=cfg.io_retries,
                                io_backoff_s=cfg.io_backoff_s)
         self.backing = backing
-        store = TieredStore(lo, backing, self.ledger)
+        store = TieredStore(lo, backing, self.ledger,
+                            shard_ledgers=self.shard_ledgers)
         if init_fn is not None:
             # Populate k contexts at a time so the device never holds more
             # than the resident partitions, even during init.
@@ -285,6 +392,7 @@ class Pems:
         reads: Optional[Sequence[str]] = None,
         writes: Optional[Sequence[str]] = None,
         name: str = "superstep",
+        procs: Optional[Sequence[int]] = None,
     ) -> ContextStore:
         """Run one computation superstep: ``fn(rho, ctx) -> ctx`` for every
         virtual processor, in rounds of ``P·k``.
@@ -292,15 +400,27 @@ class Pems:
         ``reads``/``writes`` declare the touched fields for the ``sliced``
         driver (and tighten the ledger); with the ``explicit``/``async``
         drivers the full live context swaps.
+
+        ``procs`` (tiered stores only) restricts the superstep to the named
+        processes' shards — contexts ``[p·v/P, (p+1)·v/P)`` per listed
+        ``p`` — touching only those shards' backings/ledgers.  This is the
+        per-process recovery entry point: re-running a stage with
+        ``procs=[p]`` after shard ``p``'s disk failed leaves the other
+        shards byte-for-byte untouched.  Default: every process.
         """
         cfg = self.cfg
         lo = self.layout
         sliced = cfg.driver == "sliced" and reads is not None and writes is not None
 
-        self._ledger_superstep(sliced, reads, writes)
+        self._ledger_superstep(sliced, reads, writes, procs)
 
         if isinstance(store, TieredStore):
-            return self._superstep_tiered(store, fn, reads, writes, sliced)
+            return self._superstep_tiered(store, fn, reads, writes, sliced,
+                                          procs)
+        if procs is not None:
+            raise ValueError(
+                "procs= is a tiered-store knob (per-shard recovery); the "
+                "device tier runs every process in one traced program")
 
         if sliced:
             body = self._round_body_sliced(fn, list(reads), list(writes))
@@ -326,7 +446,7 @@ class Pems:
 
     # ------------------------------------------------- tiered (host-driven)
     def _superstep_tiered(self, store: TieredStore, fn, reads, writes,
-                          sliced: bool) -> TieredStore:
+                          sliced: bool, procs=None) -> TieredStore:
         """Host-driven round pipeline over a host/memmap backing store.
 
         Per round: swap in the round's ``k`` contexts (live/declared words
@@ -342,7 +462,7 @@ class Pems:
             # Full-context swap, but live allocator bytes only (§6.6).
             in_idx = out_idx = lo.live_word_index()
         body = self._tiered_body(fn, in_idx, out_idx)
-        self._run_tiered(store, body, in_idx, out_idx)
+        self._run_tiered(store, body, in_idx, out_idx, procs)
         return store
 
     def _tiered_body(self, fn, in_idx, out_idx):
@@ -375,24 +495,42 @@ class Pems:
 
         return lambda rho0, rw: body(rho0, rw, in_j, out_j)
 
-    def _run_tiered(self, store: TieredStore, body, in_idx, out_idx) -> None:
-        cfg, stats, led = self.cfg, self.tier_stats, self.ledger
+    def _run_tiered(self, store: TieredStore, body, in_idx, out_idx,
+                    procs=None) -> None:
+        """Drive the round pipeline once per (selected) process: process
+        ``p`` swaps its own ``v/P`` contexts through its own shard of the
+        backing — its own file, engine, ledger, and stats — in ``v/(P·k)``
+        rounds.  ``procs=None`` runs every process (ID order, §6.5); a
+        subset re-runs only those shards (per-process recovery)."""
+        for p in (range(self.cfg.P) if procs is None else procs):
+            self._run_tiered_proc(store, body, in_idx, out_idx, p)
+
+    def _run_tiered_proc(self, store: TieredStore, body, in_idx, out_idx,
+                         p: int) -> None:
+        cfg = self.cfg
+        stats, led = self.shard_stats[p], self.shard_ledgers[p]
         bk = store.backing
         disk = bk.disk
         k = cfg.k
-        rounds = cfg.v // k
+        base = p * cfg.v_local
+        rounds = cfg.v_local // k
         use_async = cfg.driver == "async" and rounds > 1
+        # The shard whose engine this process drives (the whole backing at
+        # P == 1 — the two are the same object then).
+        shard = bk.shards[p] if hasattr(bk, "shards") else bk
         # Engine-backed tier + async driver: leave the writeback in flight on
         # the submission queue instead of blocking the round loop — rounds
         # touch disjoint context rows, so the only ordering requirement is
         # the final drain.  Round r's compute then overlaps round r+1's
         # swap-in (prefetch thread) AND round r-1's swap-out (engine queue):
         # true read+write overlap, measured by TierStats.rw_overlap_events.
-        async_writeback = use_async and getattr(bk, "engine", None) is not None
+        async_writeback = (use_async
+                           and getattr(shard, "engine", None) is not None)
 
         def fetch(r):
             t0 = time.perf_counter()
-            h = bk.read_block(r * k, (r + 1) * k, cols=in_idx)
+            r0 = base + r * k
+            h = bk.read_block(r0, r0 + k, cols=in_idx)
             d = jax.device_put(h)
             d.block_until_ready()
             led.add_tier_in(h.nbytes, disk)
@@ -417,27 +555,28 @@ class Pems:
                     stats.stall_s += time.perf_counter() - t0
 
                 t0 = time.perf_counter()
-                out = body(jnp.int32(r * k), blk)   # async dispatch
-                out_h = np.asarray(out)             # blocks on compute
+                out = body(jnp.int32(base + r * k), blk)   # async dispatch
+                out_h = np.asarray(out)                    # blocks on compute
                 stats.compute_s += time.perf_counter() - t0
 
                 t0 = time.perf_counter()
-                bk.write_block(r * k, (r + 1) * k, out_h, cols=out_idx,
+                r0 = base + r * k
+                bk.write_block(r0, r0 + k, out_h, cols=out_idx,
                                wait=not async_writeback)
                 led.add_tier_out(out_h.nbytes, disk)
                 stats.swap_out_s += time.perf_counter() - t0
                 stats.rounds += 1
-                if self.cursor is not None:
+                if self.cursors and p < len(self.cursors):
                     # Advisory progress note (atomic, not fsynced): a resume
                     # restarts the whole in-progress superstep either way,
                     # but postmortems see how far the round loop got.
-                    self.cursor.note_round(r)
+                    self.cursors[p].note_round(r)
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
             # Quiesce in-flight engine writebacks before anyone reads the
             # rows back (and so errors surface here, not at a later read).
-            bk.drain()
+            shard.drain()
 
     # ----------------------------------------------------------- round bodies
     def _run_rounds(self, local_data, body, dev):
@@ -523,7 +662,7 @@ class Pems:
         return body
 
     # ---------------------------------------------------------------- ledger
-    def _ledger_superstep(self, sliced, reads, writes):
+    def _ledger_superstep(self, sliced, reads, writes, procs=None):
         cfg, lo = self.cfg, self.layout
         B = cfg.block_bytes
         if sliced:
@@ -533,9 +672,11 @@ class Pems:
             rbytes = wbytes = lo.live_bytes
         # Every VP swaps in its (touched) context and swaps it back out once
         # per virtual superstep (§6.1: a careful implementation swaps each
-        # context in and out exactly once).
-        self.ledger.add_swap_in(rbytes * cfg.v, B)
-        self.ledger.add_swap_out(wbytes * cfg.v, B)
+        # context in and out exactly once).  A procs-restricted (recovery)
+        # run only swaps the listed shards' contexts.
+        nctx = cfg.v if procs is None else len(procs) * cfg.v_local
+        self.ledger.add_swap_in(rbytes * nctx, B)
+        self.ledger.add_swap_out(wbytes * nctx, B)
         self.ledger.add_barrier()
 
     # ------------------------------------------------------- debugging helper

@@ -213,6 +213,18 @@ class TierStats:
         for f in dataclasses.fields(TierStats):
             setattr(self, f.name, f.default)
 
+    def merge(self, other: "TierStats") -> "TierStats":
+        """Combine two pipelines' stats: counters and times sum; high-water
+        marks (``peak_stage_bytes``, ``max_queue_depth``) take the max.
+        Used to aggregate the per-shard stats of a ``P > 1`` tiered run."""
+        out = TierStats()
+        for f in dataclasses.fields(TierStats):
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        out.peak_stage_bytes = max(self.peak_stage_bytes,
+                                   other.peak_stage_bytes)
+        out.max_queue_depth = max(self.max_queue_depth, other.max_queue_depth)
+        return out
+
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self) | {
             "overlap_fraction": self.overlap_fraction,

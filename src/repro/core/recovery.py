@@ -79,11 +79,26 @@ class SuperstepCursor:
     writes are flushed, ``in_progress`` the stage that was running (None
     between stages), ``round`` an advisory executor-round note within the
     in-progress stage.
+
+    Under the sharded backing (``P > 1``) a recoverable run keeps **one
+    cursor per process** (see :meth:`path_for`): process p's cursor commits
+    when *its shard's* writes are flushed, so a single-disk failure leaves
+    the other processes' cursors at the completed stage and only the failed
+    process re-runs (``procs=[p]``).
     """
 
     def __init__(self, path: str):
         self.path = path
         self._cur = self._load()
+
+    @staticmethod
+    def path_for(state_dir: str, proc: int = 0, nprocs: int = 1) -> str:
+        """The cursor file for process ``proc`` of ``nprocs`` under
+        ``state_dir`` — the bare legacy name at ``nprocs == 1`` so existing
+        single-process state dirs resume unchanged."""
+        if nprocs == 1:
+            return os.path.join(state_dir, "cursor.json")
+        return os.path.join(state_dir, f"cursor.p{proc}.json")
 
     def _load(self) -> Optional[dict]:
         try:

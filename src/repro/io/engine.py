@@ -92,12 +92,29 @@ class IORequest:
 
 
 class IOEngine:
-    """Bounded submission/completion queues over one driver file."""
+    """Bounded submission/completion queues over one driver file.
+
+    Parameters:
+
+    * ``file`` — an open :mod:`repro.io.drivers` file object (``pread_into``/
+      ``pwrite``/``flush``/``close`` plus an ``align`` unit in bytes).
+    * ``queue_depth`` — maximum in-flight requests; a submit into a full
+      queue blocks (measured as ``queue_stall_s``, seconds).
+    * ``stats`` / ``ledger`` — duck-typed mirrors for the measured counters
+      (see module docstring); byte counters are in bytes, ``*_s`` in seconds.
+    * ``workers`` — worker-thread count (default ``min(queue_depth, 16)``).
+    * ``retries`` — transient-error re-attempts per request (0 = fail fast).
+    * ``backoff_s`` / ``backoff_max_s`` — base and cap of the exponential
+      retry delay, in seconds.  ``jitter`` scales a deterministic per-attempt
+      factor in ``[1, 1+jitter)``.
+    * ``name`` — optional label (e.g. ``"shard1"`` under a sharded backing)
+      included in drain-timeout diagnostics so a hung shard is identifiable.
+    """
 
     def __init__(self, file, queue_depth: int = 8, stats=None, ledger=None,
                  workers: Optional[int] = None, retries: int = 2,
                  backoff_s: float = 0.002, backoff_max_s: float = 0.25,
-                 jitter: float = 0.25):
+                 jitter: float = 0.25, name: Optional[str] = None):
         if queue_depth < 1:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         if retries < 0:
@@ -106,6 +123,7 @@ class IOEngine:
         self.queue_depth = queue_depth
         self.stats = stats
         self.ledger = ledger
+        self.name = name
         # Retry policy for transient errors (see TRANSIENT_ERRNOS): up to
         # ``retries`` re-attempts, delay min(backoff_max_s, backoff_s·2^i)
         # scaled by a deterministic per-(request, attempt) jitter factor so
@@ -310,10 +328,11 @@ class IOEngine:
                 if left <= 0:
                     pend = [(r.op, r.offset, r.nbytes)
                             for r in self._inflight]
+                    who = f"engine {self.name!r} " if self.name else ""
                     raise TimeoutError(
                         f"IOEngine.drain timed out after {timeout}s with "
                         f"{len(pend)} request(s) still in flight on "
-                        f"{getattr(self.file, 'path', '?')!r} (driver="
+                        f"{who}{getattr(self.file, 'path', '?')!r} (driver="
                         f"{getattr(self.file, 'driver', '?')}): first "
                         f"{pend[:4]} as (op, offset, nbytes) — a worker is "
                         "stuck; check for a stalled device, an injected "

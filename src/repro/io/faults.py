@@ -10,10 +10,18 @@ failure paths without real hardware faults.  Select it with
 Fault-spec grammar (semicolon-separated clauses)::
 
     spec   := clause (";" clause)*
-    clause := "seed=" N | kind "@" sel [":" param]
+    clause := "seed=" N | "shard=" N | kind "@" sel [":" param]
     kind   := "eio" | "torn" | "lat" | "enospc" | "kill"
     sel    := [op] ("*" | N | N "-" M | "p" FLOAT | "b" LO "-" HI)
     op     := "w" | "r"              -- restrict to writes / reads
+
+``shard=N`` is not a fault of its own: under a sharded backing (``P > 1``,
+one backing file + driver per mesh process) it restricts the *whole spec* to
+shard ``N``'s driver — the other shards run the clean inner driver, the
+single-disk-failure model.  It is stripped by :func:`split_shard_clause`
+before parsing; with no ``shard=`` clause the spec applies to every shard
+(and at ``P == 1`` to the only one).  Byte-range (``b``) selectors address
+offsets within the *shard's own* file.
 
 Selectors address driver-level request *attempts* (engine retries re-count),
 either by per-op index (``w3``, ``r0-4``), by overall match (``*``), by a
@@ -59,6 +67,34 @@ _SEL_RE = re.compile(
     r"^(?P<op>[wr])?(?:(?P<star>\*)|p(?P<prob>[0-9.]+)"
     r"|b(?P<blo>\d+)-(?P<bhi>\d+)|(?P<lo>\d+)(?:-(?P<hi>\d+))?)$"
 )
+
+
+def split_shard_clause(spec: Optional[str]):
+    """Strip the optional ``shard=N`` clause out of a fault spec.
+
+    Returns ``(shard, rest)`` — ``shard`` is the targeted shard index (or
+    ``None`` when the spec names no shard, meaning "every shard") and
+    ``rest`` is the spec with the clause removed, ready for
+    :meth:`FaultSpec.parse`.  The sharded backing hands ``rest`` only to
+    shard ``shard``'s driver; all other shards get the clean inner driver.
+    """
+    if not spec:
+        return None, spec
+    shard = None
+    keep = []
+    for raw in spec.split(";"):
+        s = raw.strip()
+        if s.startswith("shard="):
+            try:
+                shard = int(s[6:])
+            except ValueError:
+                raise ValueError(f"bad fault_spec shard clause {s!r}")
+            if shard < 0:
+                raise ValueError(f"fault_spec shard index must be >= 0: {s!r}")
+            continue
+        if s:
+            keep.append(s)
+    return shard, ";".join(keep)
 
 
 @dataclass

@@ -136,23 +136,29 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
     # whole pipeline as before, while backing tiers run it stage-by-stage
     # host-side — and callers (checkpoint tests, resumable jobs) can stop
     # after any stage and resume from a restored store.
+    # Every stage accepts an optional ``procs`` (tiered stores only): run the
+    # stage for the listed processes' shards alone — the per-process
+    # recovery hook psrs_run_recoverable drives after a one-disk failure.
     steps = [
-        ("sort_sample", lambda st: pems.superstep(
-            st, sort_and_sample, reads=["data"], writes=["data", "samp"])),
-        ("gather_samples", lambda st: pems.gather(
-            st, "samp", "allsamp", root=0)),
-        ("pick_splitters", lambda st: pems.superstep(
-            st, pick_splitters, reads=["allsamp"], writes=["gsplit"])),
-        ("bcast_splitters", lambda st: pems.bcast(st, "gsplit", root=0)),
-        ("partition", lambda st: pems.superstep(
+        ("sort_sample", lambda st, procs=None: pems.superstep(
+            st, sort_and_sample, reads=["data"], writes=["data", "samp"],
+            procs=procs)),
+        ("gather_samples", lambda st, procs=None: pems.gather(
+            st, "samp", "allsamp", root=0, procs=procs)),
+        ("pick_splitters", lambda st, procs=None: pems.superstep(
+            st, pick_splitters, reads=["allsamp"], writes=["gsplit"],
+            procs=procs)),
+        ("bcast_splitters", lambda st, procs=None: pems.bcast(
+            st, "gsplit", root=0, procs=procs)),
+        ("partition", lambda st, procs=None: pems.superstep(
             st, partition, reads=["data", "gsplit"],
-            writes=["bsend", "bscnt", "oflow"])),
-        ("alltoallv", lambda st: pems.alltoallv(
+            writes=["bsend", "bscnt", "oflow"], procs=procs)),
+        ("alltoallv", lambda st, procs=None: pems.alltoallv(
             st, "bsend", "brecv", "bscnt", "brcnt",
-            mode=mode, fill=INT_MAX, use_kernel=use_kernel)),
-        ("merge", lambda st: pems.superstep(
+            mode=mode, fill=INT_MAX, use_kernel=use_kernel, procs=procs)),
+        ("merge", lambda st, procs=None: pems.superstep(
             st, merge, reads=["brecv", "brcnt", "oflow"],
-            writes=["result", "rcount", "oflow"])),
+            writes=["result", "rcount", "oflow"], procs=procs)),
     ]
 
     def load(data_blocks):                  # [v, n_v] int32
@@ -256,12 +262,23 @@ def psrs_sort(
     host-driven with only k·μ device-resident at a time, optionally
     enforced via ``device_cap_bytes``.  All tiers sort bit-identically.
 
-    ``P``/``mesh`` run the simulation over ``P`` real processors (a jax
-    mesh with the ``vp`` axis): each process owns ``v/P`` contexts and the
-    final Alltoallv's network phase is α-chunked over the mesh (``alpha``,
-    Alg 7.1.3) — through the fused (src_proc, dst_proc)-tiled delivery
-    kernel by default, bit-identical to the dense ``use_kernel=False``
-    route and to the ``P == 1`` reference.
+    ``P``/``mesh`` run the simulation over ``P`` real processors: each
+    process owns ``v/P`` contexts.  On the device tier a jax mesh with the
+    ``vp`` axis is required and the final Alltoallv's network phase is
+    α-chunked over the mesh (``alpha``, Alg 7.1.3) — through the fused
+    (src_proc, dst_proc)-tiled delivery kernel by default, bit-identical to
+    the dense ``use_kernel=False`` route and to the ``P == 1`` reference.
+    On a backing tier ``P > 1`` needs no mesh: the backing is *sharded* —
+    each process owns its own ``v/P``-row backing file
+    (``backing_path + ".shard<p>"``, its own I/O engine on ``tier="file"``)
+    and the round pipeline and collectives run per process, staging the
+    network phase through per-process host buffers.  Per-shard traffic is
+    measured in ``pems.shard_ledgers[p]``/``pems.shard_stats[p]`` and sums
+    to the ``P == 1`` totals; results stay bit-identical.
+
+    Raises ``ValueError`` for n not divisible by v (and for any invalid
+    :class:`~repro.core.PemsConfig` combination) and ``OverflowError``
+    when a bucket exceeds ``cap``/``rcap``.
     """
     keys = jnp.asarray(keys, jnp.int32)
     n = keys.shape[0]
@@ -294,14 +311,20 @@ def psrs_sort(
     return out
 
 
-def _snapshot_path(state_dir: str) -> str:
-    return os.path.join(state_dir, "stage_snapshot.npz")
+def _snapshot_path(state_dir: str, proc: int = 0, nprocs: int = 1) -> str:
+    """Per-process snapshot file; the bare legacy name at ``nprocs == 1``
+    so existing single-process state dirs resume unchanged."""
+    if nprocs == 1:
+        return os.path.join(state_dir, "stage_snapshot.npz")
+    return os.path.join(state_dir, f"stage_snapshot.p{proc}.npz")
 
 
-def _save_snapshot(state_dir: str, stage: int, fields: dict) -> None:
+def _save_snapshot(state_dir: str, stage: int, fields: dict,
+                   proc: int = 0, nprocs: int = 1) -> None:
     """Atomically persist the pre-stage copy of the stage's read∩write
-    fields (restored before a dirty rerun — see STAGE_SNAPSHOT_FIELDS)."""
-    path = _snapshot_path(state_dir)
+    fields (restored before a dirty rerun — see STAGE_SNAPSHOT_FIELDS).
+    At ``nprocs > 1`` the fields hold process ``proc``'s shard rows only."""
+    path = _snapshot_path(state_dir, proc, nprocs)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, __stage__=np.int64(stage), **fields)
@@ -310,10 +333,11 @@ def _save_snapshot(state_dir: str, stage: int, fields: dict) -> None:
     os.replace(tmp, path)
 
 
-def _load_snapshot(state_dir: str, stage: int):
+def _load_snapshot(state_dir: str, stage: int,
+                   proc: int = 0, nprocs: int = 1):
     """The snapshot's field dict, iff it belongs to ``stage``."""
     try:
-        with np.load(_snapshot_path(state_dir)) as z:
+        with np.load(_snapshot_path(state_dir, proc, nprocs)) as z:
             if int(z["__stage__"]) != stage:
                 return None
             return {k: z[k] for k in z.files if k != "__stage__"}
@@ -327,6 +351,8 @@ def psrs_run_recoverable(
     *,
     state_dir: str,
     k: int = 1,
+    P: int = 1,
+    alpha: Optional[int] = None,
     driver: str = "explicit",
     mode: str = "direct",
     cap: Optional[int] = None,
@@ -355,6 +381,17 @@ def psrs_run_recoverable(
     the same arguments resumes from the last completed stage and produces
     output bit-identical to an uninterrupted run.
 
+    ``P > 1`` runs the parallel disk model: the backing is sharded into
+    ``P`` per-process files (each with its own engine on ``tier="file"``)
+    and recovery state is **per process** — one cursor
+    (``cursor.p<p>.json``) and one snapshot per shard, each stage committed
+    shard by shard (run with ``procs=[p]``, flushed via the shard's own
+    backing).  A failure on one shard's disk — e.g. a
+    ``fault_spec="shard=1;..."`` injection — leaves the other processes'
+    cursors at the completed stage; the rerun re-executes only the failed
+    process's stage against its own shard, without touching (or re-running)
+    the healthy shards.  Output stays bit-identical to the ``P == 1`` run.
+
     ``checksums`` (default on) adds per-block CRCs to the backing file so a
     torn write in the in-progress stage is detected and healed by the rerun
     instead of silently merged; a torn write can only live in the
@@ -363,7 +400,12 @@ def psrs_run_recoverable(
 
     ``crash_after_stage`` / ``crash_in_stage`` (stage name or index;
     ``"load"`` is stage 0) SIGKILL the process at the stage boundary /
-    between the stage's compute and its flush — the chaos-test hooks.
+    between the stage's compute and its flush (at ``P > 1``: after the
+    last process's compute, so earlier processes have already committed) —
+    the chaos-test hooks.
+
+    Raises ``ValueError`` for a non-disk ``tier`` or n not divisible by v,
+    and ``OverflowError`` when a bucket exceeds ``cap``/``rcap``.
     """
     keys = np.asarray(keys, np.int32)
     n = keys.size
@@ -376,19 +418,27 @@ def psrs_run_recoverable(
     os.makedirs(state_dir, exist_ok=True)
     backing_path = os.path.join(state_dir, "ctx.bin")
     pems, _load_unused, steps, extract = psrs_plan(
-        v, n_v, k=k, driver=driver, mode=mode, cap=cap, rcap=rcap,
+        v, n_v, k=k, P=P, alpha=alpha, driver=driver, mode=mode,
+        cap=cap, rcap=rcap,
         local_sort=local_sort, use_kernel=use_kernel, tier=tier,
         backing_path=backing_path, device_cap_bytes=device_cap_bytes,
         io_driver=io_driver, io_queue_depth=io_queue_depth,
         fault_spec=fault_spec, checksums=checksums, io_retries=io_retries)
 
+    m_ctx = v // P                        # contexts per process
     data_blocks = keys.reshape(v, n_v)
+
     # "load" is stage 0 (idempotent: rewrites data from the caller's input).
     # pems.init() runs exactly once below, so load goes through with_field
     # rather than psrs_plan's own load() (which would init a second engine
     # on the same backing file).
-    stages = ([("load", lambda st: st.with_field("data", data_blocks))]
-              + list(steps))
+    def load_stage(st, procs=None):
+        for p in (range(P) if procs is None else procs):
+            st = st.with_field_rows(
+                "data", p * m_ctx, data_blocks[p * m_ctx:(p + 1) * m_ctx])
+        return st
+
+    stages = [("load", load_stage)] + list(steps)
 
     def _stage_index(which):
         if which is None:
@@ -403,39 +453,56 @@ def psrs_run_recoverable(
     crash_after = _stage_index(crash_after_stage)
     crash_in = _stage_index(crash_in_stage)
 
-    cursor = SuperstepCursor(os.path.join(state_dir, "cursor.json"))
-    pems.cursor = cursor
-    st = cursor.state()
-    completed = -1 if st is None else int(st.get("completed", -1))
-    in_prog = None if st is None else st.get("in_progress")
+    cursors = [SuperstepCursor(SuperstepCursor.path_for(state_dir, p, P))
+               for p in range(P)]
+    pems.cursors = cursors
 
     store = pems.init()      # create-or-reuse: committed rows are kept
-    if in_prog is not None:
-        bk = store.backing
+    bk = store.backing
+    for p in range(P):
+        st = cursors[p].state()
+        in_prog = None if st is None else st.get("in_progress")
+        if in_prog is None:
+            continue
         if getattr(bk, "checksum", None) is not None:
             # The sidecar records *intended* CRCs for writes the crash may
             # have torn; those rows belong to the in-progress stage and are
-            # about to be regenerated, so re-bless the bytes on disk.
-            bk.recompute_checksums()
-        snap = _load_snapshot(state_dir, int(in_prog))
+            # about to be regenerated, so re-bless the bytes on disk —
+            # only the dirty process's shard under a sharded backing.
+            if hasattr(bk, "shards"):
+                bk.recompute_checksums(shard=p)
+            else:
+                bk.recompute_checksums()
+        snap = _load_snapshot(state_dir, int(in_prog), p, P)
         if snap is not None:
             for fname, val in snap.items():
-                store = store.with_field(fname, val)
+                store = store.with_field_rows(fname, p * m_ctx, val)
 
     for i, (name, fn) in enumerate(stages):
-        if i <= completed:
-            continue
-        fields = STAGE_SNAPSHOT_FIELDS.get(name, ())
-        if fields:
-            _save_snapshot(state_dir, i,
-                           {f: np.asarray(store.field(f)) for f in fields})
-        cursor.mark_in_progress(i, name)
-        store = fn(store)
-        if crash_in == i:
-            os.kill(os.getpid(), signal.SIGKILL)
-        store.flush()
-        cursor.mark_completed(i, name)
-        if crash_after == i:
+        todo = [p for p in range(P) if i > cursors[p].completed]
+        for p in todo:
+            fields = STAGE_SNAPSHOT_FIELDS.get(name, ())
+            if fields:
+                _save_snapshot(
+                    state_dir, i,
+                    {f: np.asarray(
+                        store.field_rows(f, p * m_ctx, (p + 1) * m_ctx))
+                     for f in fields},
+                    p, P)
+            cursors[p].mark_in_progress(i, name)
+            store = fn(store, procs=[p])
+            if crash_in == i and p == todo[-1]:
+                os.kill(os.getpid(), signal.SIGKILL)
+            # Commit this process's writes only: its shard's backing (and
+            # sidecar) flush before its cursor advances.  Stages write
+            # nothing outside the listed shard, so the other processes'
+            # committed bytes are untouched either way.
+            if hasattr(bk, "flush_shard"):
+                bk.flush_shard(p)
+            else:
+                store.flush()
+            cursors[p].mark_completed(i, name)
+        if todo and crash_after == i:
             os.kill(os.getpid(), signal.SIGKILL)
 
     result, rcount, oflow = extract(store)

@@ -1,0 +1,56 @@
+"""Docs satellites: public-API docstrings and the docs consistency gate."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import Pems, PemsConfig
+from repro.core.backing import FileBacking, ShardedBacking, make_backing
+from repro.io.engine import IOEngine
+from repro.pems_apps.psrs import psrs_run_recoverable, psrs_sort
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("obj", [
+    psrs_sort, psrs_run_recoverable, Pems.alltoallv, Pems.superstep,
+    PemsConfig, IOEngine, FileBacking, ShardedBacking, make_backing,
+], ids=lambda o: o.__name__)
+def test_public_api_has_docstring(obj):
+    doc = obj.__doc__
+    assert doc and len(doc.strip()) > 80, f"{obj.__name__} under-documented"
+
+
+def test_docstrings_cover_sharding_and_units():
+    """Spot checks: the P>1 sharding semantics and byte units the tentpole
+    introduced are actually stated where users will look for them."""
+    assert ".shard" in psrs_sort.__doc__            # shard file naming
+    assert "shard" in psrs_run_recoverable.__doc__.lower()
+    assert "bytes" in PemsConfig.__doc__            # byte-valued knob units
+    assert "procs" in Pems.alltoallv.__doc__        # per-process restriction
+    assert "Raises" in psrs_sort.__doc__ or "raises" in psrs_sort.__doc__
+    assert "seconds" in IOEngine.__doc__            # time units
+    assert "TUNING" in PemsConfig.__doc__           # pointer to the guide
+
+
+def test_check_docs_gate_passes():
+    """The CI docs gate (link check + PemsConfig coverage of TUNING.md)
+    passes against the committed tree."""
+    r = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "scripts", "check_docs.py")],
+        capture_output=True, text=True, timeout=60, cwd=_ROOT,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "docs OK" in r.stdout
+
+
+def test_architecture_and_tuning_exist_and_are_linked():
+    for name in ("ARCHITECTURE.md", "TUNING.md"):
+        path = os.path.join(_ROOT, "docs", name)
+        assert os.path.exists(path), name
+        assert len(open(path).read()) > 2000, f"{name} is a stub"
+    readme = open(os.path.join(_ROOT, "README.md")).read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/TUNING.md" in readme
