@@ -1,6 +1,6 @@
 """CI benchmark regression gates.
 
-Two schemas, dispatched on the files' ``benchmark`` field:
+Three schemas, dispatched on the files' ``benchmark`` field:
 
 * ``alltoallv`` (``BENCH_alltoallv.smoke.json``): the *paired-sample*
   statistic — ``speedup_vs_dense`` is the median of per-iteration
@@ -20,6 +20,18 @@ Two schemas, dispatched on the files' ``benchmark`` field:
   additionally held to ``--checksum-overhead`` (default 15%) wall-time
   overhead against their checksum-off twin *within the new run*, bounding
   the cost of the per-block CRC sidecar.
+
+* ``psrs_phases`` (``BENCH_psrs.smoke.json``): the merge-stage gate.  Each
+  ``merge`` row is the same paired-sample statistic as ``alltoallv``
+  (median per-iteration dense/kernel ratio on authentic post-delivery
+  buckets), held to the *stricter* of the relative floor
+  (``baseline / --threshold``) and the absolute ``--merge-floor`` (default
+  1.15) — a silent fallback to the dense re-sort reads speedup ≈ 1.0 and
+  fails the absolute floor no matter what the baseline says.  ``stream``
+  rows (PSRS on a disk backing) must keep ``merge_prefetch_events`` > 0 in
+  the *new* run: a streamed merge that stopped submitting bucket reads
+  ahead of need is a regression even when wall time looks fine.  Missing
+  rows of either kind fail.
 
 A machine-class guard skips the comparison (exit 0 with a notice) when the
 two files disagree on backend or sweep shape — a CPU baseline says nothing
@@ -118,6 +130,65 @@ def check_io(base: dict, new: dict, overlap_slack: float,
     return 0
 
 
+def check_psrs(base: dict, new: dict, threshold: float,
+               merge_floor: float) -> int:
+    def key(r):
+        return (r["n_words"], r["tile"])
+
+    base_rows = {key(r): r for r in base["merge"]}
+    new_rows = {key(r): r for r in new["merge"]}
+    missing = sorted(set(base_rows) - set(new_rows))
+    if missing:
+        print(f"FAIL: baseline merge rows missing from the new run "
+              f"(n_words, tile): {missing}")
+        return 1
+
+    failures = []
+    for k in sorted(base_rows):
+        b, n = base_rows[k], new_rows[k]
+        # The absolute floor is what catches a silent fallback to the dense
+        # path (speedup ≈ 1.0) even if the committed baseline ever degraded.
+        floor = max(merge_floor, b["speedup_vs_dense"] / threshold)
+        status = "ok" if n["speedup_vs_dense"] >= floor else "REGRESSED"
+        print(f"n_words={k[0]:>8} tile={k[1]:>5}: merge paired speedup "
+              f"baseline={b['speedup_vs_dense']:.3f} "
+              f"new={n['speedup_vs_dense']:.3f} floor={floor:.3f} [{status}]")
+        if status != "ok":
+            failures.append(k)
+    if failures:
+        print(f"FAIL: merge kernel lost its paired advantage (floor = "
+              f"max({merge_floor}, baseline/{threshold})) on rows {failures}")
+        return 1
+
+    def skey(r):
+        return (r["tier"], r["driver"])
+
+    base_stream = {skey(r) for r in base["stream"]}
+    new_stream = {skey(r): r for r in new["stream"]}
+    missing_s = sorted(base_stream - set(new_stream))
+    if missing_s:
+        print(f"FAIL: baseline stream rows missing from the new run: "
+              f"{missing_s}")
+        return 1
+    dead = []
+    for k in sorted(new_stream):
+        r = new_stream[k]
+        ev = r["merge_prefetch_events"]
+        status = "ok" if ev > 0 else "REGRESSED"
+        print(f"tier={k[0]:7s} driver={k[1]:9s}: merge_prefetch_events={ev} "
+              f"stall={r['merge_stall_s']:.4f}s [{status}]")
+        if status != "ok":
+            dead.append(k)
+    if dead:
+        print(f"FAIL: streamed merge submitted no prefetch reads on rows "
+              f"{dead} — the stage stopped overlapping disk with compute")
+        return 1
+    print(f"OK: merge paired speedup above max({merge_floor}, "
+          f"baseline/{threshold}) on all {len(base_rows)} rows and every "
+          "streamed merge still prefetches")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
@@ -131,6 +202,10 @@ def main() -> int:
                     help="io_engine gate: max allowed wall-time overhead of "
                          "a checksum-on psrs row vs its checksum-off twin "
                          "(within the new run, so machine speed cancels)")
+    ap.add_argument("--merge-floor", type=float, default=1.15,
+                    help="psrs_phases gate: absolute minimum paired merge "
+                         "speedup_vs_dense (catches a silent fallback to "
+                         "the dense re-sort regardless of baseline)")
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -151,6 +226,8 @@ def main() -> int:
     if base.get("benchmark") == "io_engine":
         return check_io(base, new, args.overlap_slack,
                         args.checksum_overhead)
+    if base.get("benchmark") == "psrs_phases":
+        return check_psrs(base, new, args.threshold, args.merge_floor)
 
     # P defaults to 1 so pre-mesh baselines keep matching.
     base_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c

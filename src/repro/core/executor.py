@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence
 
@@ -115,6 +116,12 @@ class PemsConfig:
       single-disk-failure model.
     * ``checksums`` — disk tiers: per-64KiB-segment CRC sidecars on the
       backing, verified on every read (torn-write detection).
+    * ``merge_kernel``/``merge_tile`` — app-level merge stages (PSRS):
+      route the merge through the tiled k-way merge kernel
+      (:mod:`repro.kernels.kway_merge`) in ``merge_tile``-wide output
+      tiles, instead of the dense ``jnp.sort`` re-sort of the received
+      buckets.  Bit-identical either way; ``merge_tile`` must be a power
+      of two.
 
     Raises ``ValueError`` at construction for any invalid combination —
     unknown names, out-of-range ``alpha``, ``io_*`` knobs without
@@ -142,6 +149,11 @@ class PemsConfig:
                                       # (see repro.io.faults grammar)
     checksums: bool = False     # disk tiers: per-block CRC sidecar on the
                                 # backing file, verified on every read
+    merge_kernel: bool = True   # app merge stages: tiled k-way merge kernel
+                                # (False = dense jnp.sort re-sort, the seed
+                                # path; bit-identical either way)
+    merge_tile: int = 256       # k-way merge output tile width (power of
+                                # two; one merge grid step per tile)
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
@@ -200,6 +212,13 @@ class PemsConfig:
                 "integer >= 1"
             )
         self.io_queue_depth = int(self.io_queue_depth)
+        if (self.merge_tile != int(self.merge_tile) or self.merge_tile < 2
+                or int(self.merge_tile) & (int(self.merge_tile) - 1)):
+            raise ValueError(
+                f"merge_tile={self.merge_tile!r} must be a power-of-two "
+                "integer >= 2 (one k-way merge grid step per tile)"
+            )
+        self.merge_tile = int(self.merge_tile)
         if self.v % self.P:
             raise ValueError("v must be divisible by P")
         if (self.v // self.P) % self.k:
@@ -393,6 +412,7 @@ class Pems:
         writes: Optional[Sequence[str]] = None,
         name: str = "superstep",
         procs: Optional[Sequence[int]] = None,
+        stream: bool = False,
     ) -> ContextStore:
         """Run one computation superstep: ``fn(rho, ctx) -> ctx`` for every
         virtual processor, in rounds of ``P·k``.
@@ -407,6 +427,15 @@ class Pems:
         per-process recovery entry point: re-running a stage with
         ``procs=[p]`` after shard ``p``'s disk failed leaves the other
         shards byte-for-byte untouched.  Default: every process.
+
+        ``stream`` (disk backing tiers only; ignored elsewhere) marks an
+        I/O-bound stage — PSRS's k-way merge over the received buckets —
+        whose round swap-ins should be prefetched through the block API
+        while the previous round computes *regardless* of the configured
+        driver, so merge compute overlaps disk reads even under
+        ``driver="explicit"``.  Results are bit-identical (rounds touch
+        disjoint rows); ``TierStats.merge_prefetch_events`` counts the
+        overlapped swap-ins and ``merge_stall_s`` the residual blocking.
         """
         cfg = self.cfg
         lo = self.layout
@@ -416,7 +445,7 @@ class Pems:
 
         if isinstance(store, TieredStore):
             return self._superstep_tiered(store, fn, reads, writes, sliced,
-                                          procs)
+                                          procs, stream)
         if procs is not None:
             raise ValueError(
                 "procs= is a tiered-store knob (per-shard recovery); the "
@@ -446,7 +475,8 @@ class Pems:
 
     # ------------------------------------------------- tiered (host-driven)
     def _superstep_tiered(self, store: TieredStore, fn, reads, writes,
-                          sliced: bool, procs=None) -> TieredStore:
+                          sliced: bool, procs=None,
+                          stream: bool = False) -> TieredStore:
         """Host-driven round pipeline over a host/memmap backing store.
 
         Per round: swap in the round's ``k`` contexts (live/declared words
@@ -462,7 +492,7 @@ class Pems:
             # Full-context swap, but live allocator bytes only (§6.6).
             in_idx = out_idx = lo.live_word_index()
         body = self._tiered_body(fn, in_idx, out_idx)
-        self._run_tiered(store, body, in_idx, out_idx, procs)
+        self._run_tiered(store, body, in_idx, out_idx, procs, stream)
         return store
 
     def _tiered_body(self, fn, in_idx, out_idx):
@@ -473,40 +503,58 @@ class Pems:
         in_j = None if in_idx is None else jnp.asarray(in_idx, jnp.int32)
         out_j = None if out_idx is None else jnp.asarray(out_idx, jnp.int32)
 
-        @jax.jit
-        def body(rho0, rw, in_i, out_i):   # rw: [k, n_in] uint32
-            rhos = rho0 + jnp.arange(k, dtype=jnp.int32)
+        # Cache the jitted body per stage function: jax.jit keys on function
+        # identity, so a fresh closure here would re-trace and recompile the
+        # stage on *every* superstep call (ruinous for big traces like the
+        # unrolled k-way merge network).  Everything else the trace depends
+        # on is either fixed per executor (lo, k), a runtime argument
+        # (rw, in_j/out_j — index *contents* never shape a trace), or part
+        # of jit's own cache key (shapes; None-ness via pytree structure).
+        cache = getattr(self, "_tiered_body_cache", None)
+        if cache is None:
+            cache = self._tiered_body_cache = weakref.WeakKeyDictionary()
+        body = cache.get(fn)
+        if body is None:
+            @jax.jit
+            def body(rho0, rw, in_i, out_i):   # rw: [k, n_in] uint32
+                rhos = rho0 + jnp.arange(k, dtype=jnp.int32)
 
-            def one(rho, r):
-                if in_i is None:
-                    w = r
-                else:
-                    # Same zero-fill convention as the sliced device driver:
-                    # undeclared (or dead) words are simply not resident.
-                    w = jnp.zeros((lo.words,), jnp.uint32).at[in_i].set(
-                        r, indices_are_sorted=True, unique_indices=True
-                    )
-                out = fn(rho, Ctx(lo, w)).words
-                if out_i is None:
-                    return out
-                return out.take(out_i)
+                def one(rho, r):
+                    if in_i is None:
+                        w = r
+                    else:
+                        # Same zero-fill convention as the sliced device
+                        # driver: undeclared (or dead) words are simply not
+                        # resident.
+                        w = jnp.zeros((lo.words,), jnp.uint32).at[in_i].set(
+                            r, indices_are_sorted=True, unique_indices=True
+                        )
+                    out = fn(rho, Ctx(lo, w)).words
+                    if out_i is None:
+                        return out
+                    return out.take(out_i)
 
-            return jax.vmap(one)(rhos, rw)
+                return jax.vmap(one)(rhos, rw)
+
+            try:
+                cache[fn] = body
+            except TypeError:      # fn not weakref-able: run uncached
+                pass
 
         return lambda rho0, rw: body(rho0, rw, in_j, out_j)
 
     def _run_tiered(self, store: TieredStore, body, in_idx, out_idx,
-                    procs=None) -> None:
+                    procs=None, stream: bool = False) -> None:
         """Drive the round pipeline once per (selected) process: process
         ``p`` swaps its own ``v/P`` contexts through its own shard of the
         backing — its own file, engine, ledger, and stats — in ``v/(P·k)``
         rounds.  ``procs=None`` runs every process (ID order, §6.5); a
         subset re-runs only those shards (per-process recovery)."""
         for p in (range(self.cfg.P) if procs is None else procs):
-            self._run_tiered_proc(store, body, in_idx, out_idx, p)
+            self._run_tiered_proc(store, body, in_idx, out_idx, p, stream)
 
     def _run_tiered_proc(self, store: TieredStore, body, in_idx, out_idx,
-                         p: int) -> None:
+                         p: int, stream: bool = False) -> None:
         cfg = self.cfg
         stats, led = self.shard_stats[p], self.shard_ledgers[p]
         bk = store.backing
@@ -514,7 +562,12 @@ class Pems:
         k = cfg.k
         base = p * cfg.v_local
         rounds = cfg.v_local // k
-        use_async = cfg.driver == "async" and rounds > 1
+        # A streamed stage (PSRS merge) prefetches its round swap-ins on a
+        # disk backing under *every* driver — the stage is I/O bound by
+        # construction, so the explicit/sliced drivers get the §5.1 overlap
+        # for it too.  Bit-identical: rounds touch disjoint context rows.
+        streamed = stream and disk and rounds > 1
+        use_async = (cfg.driver == "async" or streamed) and rounds > 1
         # The shard whose engine this process drives (the whole backing at
         # P == 1 — the two are the same object then).
         shard = bk.shards[p] if hasattr(bk, "shards") else bk
@@ -544,11 +597,18 @@ class Pems:
                 if use_async:
                     t0 = time.perf_counter()
                     blk = nxt.result()
-                    stats.stall_s += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    stats.stall_s += dt
+                    if streamed:
+                        stats.merge_stall_s += dt
                     if r + 1 < rounds:
                         # Safe to overlap with round r's writeback: rounds
                         # touch disjoint context rows.
                         nxt = pool.submit(fetch, r + 1)
+                        if streamed:
+                            # This swap-in runs while round r's compute is
+                            # in flight — the measurable merge/read overlap.
+                            stats.merge_prefetch_events += 1
                 else:
                     t0 = time.perf_counter()
                     blk = fetch(r)

@@ -201,6 +201,15 @@ class TierStats:
     permanent_errors: int = 0  # requests that errored after retries exhausted
                                # (or a non-transient errno, first attempt)
 
+    # Streamed-stage instrumentation (superstep(..., stream=True) on a disk
+    # backing — the k-way merge stage of PSRS): the stage's bucket reads are
+    # prefetched through the block API while the previous round's merge
+    # computes, regardless of the configured driver.
+    merge_prefetch_events: int = 0  # round swap-ins issued ahead of need,
+                                    # overlapping the in-flight compute
+    merge_stall_s: float = 0.0      # time the streamed stage still blocked
+                                    # waiting on a prefetched round
+
     @property
     def overlap_fraction(self) -> float:
         """Fraction of swap-in time hidden behind compute (0 when nothing

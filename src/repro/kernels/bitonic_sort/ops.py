@@ -1,21 +1,34 @@
 """Public sort wrapper: pads to a power of two with the dtype's max so the
-padding sorts to the tail, then slices it off."""
+padding sorts to the tail, then slices it off.
+
+Backend selection mirrors the delivery kernel's tri-state ``interpret``
+(:func:`repro.kernels.alltoallv_deliver.ops.uses_pallas`): ``None`` (auto,
+the default) compiles the Pallas network on TPU and falls back to
+``jnp.sort`` on backends without a native Pallas lowering — interpret-mode
+execution would serialise the row grid and the log²(n) stages;
+``interpret=True`` runs the kernel bit-exactly anywhere (tests);
+``use_kernel=False`` forces the ``jnp.sort`` reference.  All paths sort
+ascending and are bit-identical on total orders (ints; NaN-free floats).
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.alltoallv_deliver.ops import uses_pallas
 
 from .bitonic_sort import bitonic_sort_rows
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def sort(x: jnp.ndarray, *, interpret: bool = False,
+def sort(x: jnp.ndarray, *, interpret: Optional[bool] = None,
          use_kernel: bool = True) -> jnp.ndarray:
     """Ascending sort of the last axis of a 1-D or 2-D array."""
-    if not use_kernel:
+    if not (use_kernel and uses_pallas(interpret)):
         return jnp.sort(x, axis=-1)
 
     squeeze = x.ndim == 1
@@ -28,7 +41,7 @@ def sort(x: jnp.ndarray, *, interpret: bool = False,
         x = jnp.concatenate(
             [x, jnp.full((rows, n_pad - n), fill, x.dtype)], axis=1
         )
-    out = bitonic_sort_rows(x, interpret=interpret)[:, :n]
+    out = bitonic_sort_rows(x, interpret=bool(interpret))[:, :n]
     return out[0] if squeeze else out
 
 

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the tiled k-way merge.
+
+Semantics the kernel must reproduce bit-for-bit: mask every lane at or past
+its bucket's count to ``fill``, sort the whole ``v·cap`` population flat, and
+keep the lowest ``rcap`` values (``fill``-padded when the population is
+smaller than ``rcap``).  This is exactly what PSRS's seed merge stage
+computed with ``jnp.sort(recv.reshape(-1))[:rcap]`` on fill-masked buckets.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kway_merge_ref(buckets: jnp.ndarray, counts: jnp.ndarray, *,
+                   rcap: int, fill) -> jnp.ndarray:
+    """Lowest ``rcap`` of the masked ``[v, cap]`` buckets, ascending."""
+    buckets = jnp.asarray(buckets)
+    v, cap = buckets.shape
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    masked = jnp.where(lane[None, :] < counts[:, None].astype(jnp.int32),
+                       buckets, jnp.asarray(fill, buckets.dtype))
+    flat = jnp.sort(masked.reshape(-1))
+    if flat.shape[0] >= rcap:
+        return flat[:rcap]
+    pad = jnp.full((rcap - flat.shape[0],), fill, buckets.dtype)
+    return jnp.concatenate([flat, pad])

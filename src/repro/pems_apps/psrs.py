@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ContextLayout, Pems, PemsConfig, SuperstepCursor
+from repro.kernels.bitonic_sort import bitonic_sort
+from repro.kernels.kway_merge import kway_merge
 from .common import INT_MAX, group_by_dest
 
 # Fields each stage both reads and writes: rerunning such a stage after a
@@ -45,11 +47,17 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
            tier: str = "device", backing_path=None, device_cap_bytes=None,
            P: int = 1, mesh=None, alpha=None,
            io_driver=None, io_queue_depth=None,
-           fault_spec=None, checksums: bool = False, io_retries=None):
+           fault_spec=None, checksums: bool = False, io_retries=None,
+           merge_kernel=None, merge_tile=None):
     # One home for the PSRS capacity defaults: the always-safe per-message
     # bound n/v and the 2n/v per-receiver guarantee.
     cap = n_v if cap is None else cap
     rcap = 2 * n_v if rcap is None else rcap
+    # Default local sort: the bitonic kernel (auto backend — compiled Pallas
+    # on TPU, jnp.sort on CPU/GPU).  use_kernel=False keeps the seed's
+    # jnp.sort on every path; both are bit-identical on int32 keys.
+    if local_sort is None:
+        local_sort = bitonic_sort if use_kernel else jnp.sort
     lo = (
         ContextLayout()
         .add("data", (n_v,), jnp.int32)
@@ -75,6 +83,10 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         io_kw["io_retries"] = io_retries
     if checksums:
         io_kw["checksums"] = True
+    if merge_kernel is not None:
+        io_kw["merge_kernel"] = bool(merge_kernel)
+    if merge_tile is not None:
+        io_kw["merge_tile"] = merge_tile
     pems = Pems(PemsConfig(v=v, k=k, P=P, driver=driver, tier=tier,
                            backing_path=backing_path, alpha=alpha,
                            device_cap_bytes=device_cap_bytes, **io_kw),
@@ -122,14 +134,23 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         # as-is — no re-mask pass over the 2n/v received words.
         recv = ctx.get("brecv")              # [v, cap]
         cnt = ctx.get("brcnt")               # [v]
-        flat = recv.reshape(-1)
-        merged = local_sort(flat)[:rcap]
-        total = cnt.sum()
-        over = (total > rcap).astype(jnp.int32)
+        if pems.cfg.merge_kernel and use_kernel:
+            # Tiled k-way merge with exact splitting: O(n log v) over the
+            # already-sorted buckets instead of the O(n log n) re-sort, and
+            # the overflow flag is raised by the op itself at the stage
+            # boundary — the truncation to rcap can never outrun it.
+            merged, total, over = kway_merge(
+                recv, cnt, rcap=rcap, tile=pems.cfg.merge_tile,
+                fill=INT_MAX)
+        else:
+            flat = recv.reshape(-1)
+            merged = local_sort(flat)[:rcap]
+            total = cnt.sum()
+            over = (total > rcap).astype(jnp.int32)
         return (
             ctx.set("result", merged)
             .set("rcount", total[None].astype(jnp.int32))
-            .set("oflow", ctx.get("oflow") | over[None])
+            .set("oflow", ctx.get("oflow") | over.astype(jnp.int32)[None])
         )
 
     # The program as an explicit stage list: the device tier jit-fuses the
@@ -156,9 +177,13 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         ("alltoallv", lambda st, procs=None: pems.alltoallv(
             st, "bsend", "brecv", "bscnt", "brcnt",
             mode=mode, fill=INT_MAX, use_kernel=use_kernel, procs=procs)),
+        # stream=True: on a disk backing the merge's bucket reads are
+        # prefetched through the block API while the previous round merges,
+        # under every driver (TierStats.merge_prefetch_events counts them).
         ("merge", lambda st, procs=None: pems.superstep(
             st, merge, reads=["brecv", "brcnt", "oflow"],
-            writes=["result", "rcount", "oflow"], procs=procs)),
+            writes=["result", "rcount", "oflow"], procs=procs,
+            stream=True)),
     ]
 
     def load(data_blocks):                  # [v, n_v] int32
@@ -190,7 +215,7 @@ def psrs_plan(
     mode: str = "direct",
     cap: Optional[int] = None,
     rcap: Optional[int] = None,
-    local_sort=jnp.sort,
+    local_sort=None,
     use_kernel: bool = True,
     tier: str = "device",
     backing_path=None,
@@ -203,6 +228,8 @@ def psrs_plan(
     fault_spec=None,
     checksums: bool = False,
     io_retries=None,
+    merge_kernel: Optional[bool] = None,
+    merge_tile: Optional[int] = None,
 ):
     """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
 
@@ -217,6 +244,7 @@ def psrs_plan(
         device_cap_bytes=device_cap_bytes, P=P, mesh=mesh, alpha=alpha,
         io_driver=io_driver, io_queue_depth=io_queue_depth,
         fault_spec=fault_spec, checksums=checksums, io_retries=io_retries,
+        merge_kernel=merge_kernel, merge_tile=merge_tile,
     )
     return pems, load, steps, extract
 
@@ -229,7 +257,7 @@ def psrs_sort(
     mode: str = "direct",
     cap: Optional[int] = None,
     rcap: Optional[int] = None,
-    local_sort=jnp.sort,
+    local_sort=None,
     return_pems: bool = False,
     use_kernel: bool = True,
     tier: str = "device",
@@ -243,15 +271,28 @@ def psrs_sort(
     fault_spec=None,
     checksums: bool = False,
     io_retries=None,
+    merge_kernel: Optional[bool] = None,
+    merge_tile: Optional[int] = None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
     ``mode`` selects PEMS2 direct delivery or the PEMS1 indirect baseline for
     the final Alltoallv; ``cap`` is the per-(sender,dest) message capacity ω
     (defaults to the always-safe n/v) and ``rcap`` the per-receiver capacity
-    (defaults to the PSRS guarantee 2n/v).  ``use_kernel`` toggles the fused
-    Pallas delivery path in the final Alltoallv (results are bit-identical
-    either way; kept for equivalence testing).
+    (defaults to the PSRS guarantee 2n/v).  ``use_kernel`` toggles the
+    kernel paths end to end — the fused Pallas delivery in the final
+    Alltoallv, the bitonic local sort, and the tiled k-way merge; ``False``
+    keeps the seed's dense/jnp.sort routes (results are bit-identical
+    either way; kept for equivalence testing).  ``merge_kernel``/
+    ``merge_tile`` (defaults from :class:`~repro.core.PemsConfig`) control
+    the merge stage alone: the exact-splitter tiled merge of the v received
+    sorted buckets — O(n log v) instead of the dense O(n log n) re-sort —
+    in ``merge_tile``-wide output tiles, with its input buckets streamed
+    through the backing block API on disk tiers so merge compute overlaps
+    the reads (``pems.tier_stats.merge_prefetch_events``).  ``local_sort``
+    overrides the local-sort primitive (default: the ``bitonic_sort``
+    kernel with automatic backend dispatch; ``jnp.sort`` when
+    ``use_kernel=False``).
 
     ``tier`` selects where the context population lives: ``"device"`` (the
     seed in-memory path, whole program jitted), ``"host"`` (host RAM),
@@ -293,7 +334,9 @@ def psrs_sort(
                               io_driver=io_driver,
                               io_queue_depth=io_queue_depth,
                               fault_spec=fault_spec, checksums=checksums,
-                              io_retries=io_retries)
+                              io_retries=io_retries,
+                              merge_kernel=merge_kernel,
+                              merge_tile=merge_tile)
     data = keys.reshape(v, n_v)
     if tier != "device":
         data = np.asarray(data)
@@ -357,7 +400,7 @@ def psrs_run_recoverable(
     mode: str = "direct",
     cap: Optional[int] = None,
     rcap: Optional[int] = None,
-    local_sort=jnp.sort,
+    local_sort=None,
     use_kernel: bool = True,
     tier: str = "file",
     io_driver=None,
@@ -369,6 +412,8 @@ def psrs_run_recoverable(
     crash_after_stage=None,
     crash_in_stage=None,
     return_pems: bool = False,
+    merge_kernel: Optional[bool] = None,
+    merge_tile: Optional[int] = None,
 ):
     """PSRS with durable superstep recovery: survives ``kill -9``.
 
@@ -423,7 +468,8 @@ def psrs_run_recoverable(
         local_sort=local_sort, use_kernel=use_kernel, tier=tier,
         backing_path=backing_path, device_cap_bytes=device_cap_bytes,
         io_driver=io_driver, io_queue_depth=io_queue_depth,
-        fault_spec=fault_spec, checksums=checksums, io_retries=io_retries)
+        fault_spec=fault_spec, checksums=checksums, io_retries=io_retries,
+        merge_kernel=merge_kernel, merge_tile=merge_tile)
 
     m_ctx = v // P                        # contexts per process
     data_blocks = keys.reshape(v, n_v)

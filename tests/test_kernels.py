@@ -11,6 +11,12 @@ from repro.kernels.alltoallv_deliver.ref import deliver_ref
 from repro.kernels.bitonic_sort.ops import sort as bitonic_sort
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kway_merge import (
+    kway_merge,
+    kway_merge_ref,
+    merge_tile_grid,
+    sort_tile_rows,
+)
 from repro.kernels.lru_scan.ops import lru_scan
 from repro.kernels.lru_scan.ref import lru_scan_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
@@ -345,6 +351,196 @@ def test_ssd_scan_chunk_invariance():
 
 
 # --------------------------------------------------------------------------- #
+# k-way merge                                                                  #
+# --------------------------------------------------------------------------- #
+
+def _merge_case(v, cap, dtype, kind, rng=None):
+    """Sorted buckets [v, cap] (garbage past counts, as after delivery) and
+    per-bucket counts for the given input shape family."""
+    rng = RNG if rng is None else rng
+    info = np.iinfo(dtype)
+    if kind == "random":
+        raw = rng.integers(info.min, info.max, size=(v, cap),
+                           dtype=dtype, endpoint=True)
+    elif kind == "dups":          # duplicate-heavy: splitter tie-breaking
+        raw = (rng.integers(-3, 4, size=(v, cap)) % np.uint64(2**32)
+               ).astype(dtype) if dtype == np.uint32 else \
+              rng.integers(-3, 4, size=(v, cap)).astype(dtype)
+    elif kind == "fillmax":       # every lane at the fill sentinel
+        raw = np.full((v, cap), info.max, dtype)
+    else:                         # presorted: already globally ascending
+        raw = np.sort(rng.integers(info.min, info.max, size=(v, cap),
+                                   dtype=dtype, endpoint=True), axis=None
+                      ).reshape(v, cap)
+    counts = rng.integers(0, cap + 1, size=v).astype(np.int32)
+    lane = np.arange(cap)
+    buckets = raw.copy()
+    for j in range(v):            # sort the valid prefix, garbage the rest
+        buckets[j, :counts[j]] = np.sort(raw[j, :counts[j]])
+        buckets[j, counts[j]:] = raw[j, ::-1][lane[counts[j]:] % cap]
+    return buckets, counts
+
+
+@pytest.mark.parametrize("v,cap,rcap", [
+    (1, 64, 128), (2, 100, 200), (5, 17, 34), (8, 64, 128), (6, 50, 90),
+])
+@pytest.mark.parametrize("tile", [8, 64, 256])
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32])
+@pytest.mark.parametrize("kind", ["random", "dups", "fillmax", "presorted"])
+def test_kway_merge_sweep(v, cap, rcap, tile, dtype, kind):
+    """Fallback path vs the oracle across shapes × tile widths × dtypes,
+    including all-sentinel lanes, duplicate-heavy and presorted inputs."""
+    buckets, counts = _merge_case(v, cap, dtype, kind)
+    fill = int(np.iinfo(dtype).max)
+    merged, total, over = kway_merge(
+        jnp.asarray(buckets), jnp.asarray(counts), rcap=rcap, tile=tile,
+        fill=fill, use_kernel=False)
+    ref = kway_merge_ref(jnp.asarray(buckets), jnp.asarray(counts),
+                         rcap=rcap, fill=fill)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(ref))
+    assert int(total) == int(counts.sum())
+    assert bool(over) == (int(counts.sum()) > rcap)
+
+
+@pytest.mark.parametrize("v,cap,rcap,tile", [
+    (2, 100, 200, 64), (8, 64, 128, 16), (3, 33, 50, 8), (6, 50, 90, 64),
+])
+def test_kway_merge_tile_grid_equivalence(v, cap, rcap, tile):
+    """Interpret-mode Pallas grid vs the oracle and vs the batched jnp
+    network: all three bit-identical."""
+    buckets, counts = _merge_case(v, cap, np.int32, "random")
+    fill = np.iinfo(np.int32).max
+    grid, *_ = kway_merge(jnp.asarray(buckets), jnp.asarray(counts),
+                          rcap=rcap, tile=tile, fill=fill, interpret=True)
+    fall, *_ = kway_merge(jnp.asarray(buckets), jnp.asarray(counts),
+                          rcap=rcap, tile=tile, fill=fill, use_kernel=False)
+    ref = kway_merge_ref(jnp.asarray(buckets), jnp.asarray(counts),
+                         rcap=rcap, fill=fill)
+    np.testing.assert_array_equal(np.asarray(grid), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(fall), np.asarray(ref))
+
+
+def test_kway_merge_auto_backend_matches_interpret():
+    """interpret=None auto-selects a backend; must equal the interpret-mode
+    grid bit-for-bit (the deliver kernel's dispatch contract)."""
+    buckets, counts = _merge_case(4, 80, np.int32, "dups")
+    fill = np.iinfo(np.int32).max
+    auto, *_ = kway_merge(jnp.asarray(buckets), jnp.asarray(counts),
+                          rcap=160, tile=32, fill=fill)
+    interp, *_ = kway_merge(jnp.asarray(buckets), jnp.asarray(counts),
+                            rcap=160, tile=32, fill=fill, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(interp))
+
+
+def test_kway_merge_sort_tile_rows_oracle():
+    """The per-tile sort primitive alone: the batched bitonic network equals
+    jnp-less numpy row sort, across widths and batch shapes."""
+    for shape in ((3, 8), (3, 64), (5, 2, 16), (1, 32)):
+        x = RNG.integers(-1000, 1000, size=shape).astype(np.int32)
+        out = sort_tile_rows(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
+    u = RNG.integers(0, 2**32, size=(4, 128), dtype=np.uint64)
+    u = u.astype(np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(sort_tile_rows(jnp.asarray(u))), np.sort(u, axis=-1))
+
+
+def test_kway_merge_grid_matches_batched_network():
+    """merge_tile_grid (interpret) over a [G, tile] batch equals the batched
+    jnp network — the kernel body and the fallback are the same sort."""
+    x = RNG.integers(-10**6, 10**6, size=(5, 64)).astype(np.int32)
+    g = merge_tile_grid(jnp.asarray(x), interpret=True)
+    t = sort_tile_rows(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
+
+
+def test_kway_merge_validation():
+    buckets = jnp.zeros((2, 8), jnp.int32)
+    counts = jnp.ones((2,), jnp.int32)
+    imax = np.iinfo(np.int32).max
+    with pytest.raises(ValueError, match="tile"):
+        kway_merge(buckets, counts, rcap=4, tile=12, fill=imax)
+    with pytest.raises(ValueError, match="rcap"):
+        kway_merge(buckets, counts, rcap=0, fill=imax)
+    with pytest.raises(ValueError, match="fill"):
+        kway_merge(buckets, counts, rcap=4, fill=0)
+    with pytest.raises(ValueError, match="dtypes"):
+        kway_merge(jnp.zeros((2, 8), jnp.float32), counts, rcap=4,
+                   fill=np.finfo(np.float32).max)
+    with pytest.raises(ValueError, match="buckets"):
+        kway_merge(jnp.zeros((8,), jnp.int32), counts, rcap=4, fill=imax)
+
+
+def test_kway_merge_overflow_boundary():
+    """total == rcap ± 1 at the op level: the flag trips exactly when the
+    received population exceeds rcap, and the merged prefix is still the
+    correct lowest-rcap either way."""
+    v, cap = 4, 32
+    buckets, counts = _merge_case(v, cap, np.int32, "random")
+    total = int(counts.sum())
+    assert total >= 2
+    fill = np.iinfo(np.int32).max
+    for rcap, expect in ((total - 1, 1), (total, 0), (total + 1, 0)):
+        merged, tot, over = kway_merge(
+            jnp.asarray(buckets), jnp.asarray(counts), rcap=rcap, tile=16,
+            fill=fill, use_kernel=False)
+        assert int(tot) == total and int(over) == expect
+        ref = kway_merge_ref(jnp.asarray(buckets), jnp.asarray(counts),
+                             rcap=rcap, fill=fill)
+        np.testing.assert_array_equal(np.asarray(merged), np.asarray(ref))
+
+
+def test_psrs_overflow_seam_rcap_boundary():
+    """End-to-end regression for the rcap overflow seam: constant keys with
+    v=2 land exactly n_v elements on each receiver (the global-index
+    tie-break splits duplicate runs at the median), so rcap = n_v − 1 must
+    raise OverflowError while n_v and n_v + 1 succeed — on both merge
+    paths."""
+    from repro.pems_apps import psrs_sort
+    n_v, v, k = 64, 2, 2
+    x = np.full(n_v * v, 7, dtype=np.int32)
+    for merge_kernel in (True, False):
+        with pytest.raises(OverflowError, match="rcap"):
+            psrs_sort(x, v=v, k=k, rcap=n_v - 1, merge_kernel=merge_kernel)
+        for rcap in (n_v, n_v + 1):
+            out = psrs_sort(x, v=v, k=k, rcap=rcap,
+                            merge_kernel=merge_kernel)
+            np.testing.assert_array_equal(out, np.sort(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 7),
+       st.sampled_from([8, 32, 128]))
+def test_kway_merge_property(seed, v, tile):
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(1, 97))
+    rcap = int(rng.integers(1, 2 * v * cap + 1))
+    kind = ["random", "dups", "presorted"][seed % 3]
+    buckets, counts = _merge_case(v, cap, np.int32, kind, rng=rng)
+    fill = np.iinfo(np.int32).max
+    merged, total, over = kway_merge(
+        jnp.asarray(buckets), jnp.asarray(counts), rcap=rcap, tile=tile,
+        fill=fill, use_kernel=False)
+    ref = kway_merge_ref(jnp.asarray(buckets), jnp.asarray(counts),
+                         rcap=rcap, fill=fill)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(ref))
+    assert int(total) == int(counts.sum())
+    assert bool(over) == (int(counts.sum()) > rcap)
+
+
+def test_psrs_bit_identical_across_merge_kernel():
+    """psrs_sort with the tiled merge kernel vs the dense re-sort stage must
+    agree bit-for-bit, across merge_tile widths."""
+    from repro.pems_apps import psrs_sort
+    x = RNG.integers(-2**30, 2**30, size=1024, dtype=np.int32)
+    base = psrs_sort(x, v=8, k=2, merge_kernel=False)
+    np.testing.assert_array_equal(base, np.sort(x))
+    for tile in (16, 256, 1024):
+        on = psrs_sort(x, v=8, k=2, merge_kernel=True, merge_tile=tile)
+        np.testing.assert_array_equal(on, base)
+
+
+# --------------------------------------------------------------------------- #
 # PSRS with the bitonic kernel as the local sort                               #
 # --------------------------------------------------------------------------- #
 
@@ -357,3 +553,14 @@ def test_psrs_with_bitonic_local_sort():
         local_sort=functools.partial(bitonic_sort, interpret=True),
     )
     np.testing.assert_array_equal(out, np.sort(x))
+
+
+def test_psrs_default_local_sort_is_bitonic_kernel():
+    """With use_kernel=True (default) the local sort resolves to the bitonic
+    kernel wrapper; use_kernel=False keeps jnp.sort — both bit-identical."""
+    from repro.pems_apps import psrs_sort
+    x = RNG.integers(-2**31, 2**31 - 1, size=2048, dtype=np.int32)
+    on = psrs_sort(x, v=4, k=2)
+    off = psrs_sort(x, v=4, k=2, use_kernel=False)
+    np.testing.assert_array_equal(on, off)
+    np.testing.assert_array_equal(on, np.sort(x))
