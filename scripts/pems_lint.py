@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Entry point for pems-lint without an installed package.
+
+Equivalent to ``PYTHONPATH=src python -m repro.lint``; stdlib-only, so CI
+runs it before any install step.  See ``python scripts/pems_lint.py
+--list-rules`` and docs/ARCHITECTURE.md ("Invariants").
+"""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.lint.__main__ import main   # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,8 @@ import jax
 import numpy as np
 
 from repro.io import IOEngine, MmapFile
+from repro.io.npyio import (create_npy_memmap, fsync_file,
+                            load_npy_mmap, save_npy_durable)
 from repro.io.checksum import CHECKSUM_ALGO, crc_bytes
 from repro.core.recovery import fsync_dir
 
@@ -88,10 +90,7 @@ class CheckpointManager:
                     crcs = _stream_to_npy(arr, path)
                 else:
                     crcs = _array_crcs(arr)
-                    with open(path, "wb") as f:
-                        np.save(f, arr)
-                        f.flush()
-                        os.fsync(f.fileno())
+                    save_npy_durable(path, arr)
                 names.append({"key": key, "file": fn,
                               "shape": list(arr.shape),
                               "dtype": str(arr.dtype),
@@ -178,7 +177,7 @@ class CheckpointManager:
                 # Out-of-core leaf: stream the checkpoint into the caller's
                 # backing store in bounded chunks — never on device, never
                 # fully in RAM.  The leaf is filled in place.
-                src = np.load(path, mmap_mode="r")
+                src = load_npy_mmap(path)
                 if src.shape != leaf.shape or src.dtype != leaf.dtype:
                     raise IOError(
                         f"memmap leaf mismatch in {meta['file']}: checkpoint "
@@ -333,13 +332,11 @@ def _stream_to_npy(arr: np.memmap, path: str) -> List[int]:
     """Write a memmap to ``.npy`` by chunked copy (no full-RAM staging),
     fsync'd like the regular save path.  Returns the per-chunk CRCs."""
     crcs: List[int] = []
-    out = np.lib.format.open_memmap(path, mode="w+", dtype=arr.dtype,
-                                    shape=arr.shape)
+    out = create_npy_memmap(path, arr.dtype, arr.shape)
     try:
         _chunked_copy(arr, out, crcs_out=crcs)
         out.flush()
     finally:
         del out
-    with open(path, "rb+") as f:
-        os.fsync(f.fileno())
+    fsync_file(path)
     return crcs

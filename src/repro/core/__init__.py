@@ -29,7 +29,7 @@ from .context import (
 )
 from .executor import DRIVERS, Pems, PemsConfig
 from .iostats import IOLedger, TierStats
-from .recovery import SuperstepCursor, atomic_write_json
+from .recovery import SuperstepCursor, atomic_replace_file, atomic_write_json
 
 __all__ = [
     "Allocator",
@@ -50,6 +50,7 @@ __all__ = [
     "TierStats",
     "WORD",
     "analysis",
+    "atomic_replace_file",
     "atomic_write_json",
     "init_store",
     "layout",

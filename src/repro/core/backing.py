@@ -564,13 +564,15 @@ class ShardedBacking:
         for p in range(nshards):
             sp = None if path is None else f"{path}.shard{p}"
             drv, fs = io_driver, None
-            if (io_driver or "").startswith("faulty:"):
+            if "faulty" in (io_driver or "").split(":")[:-1]:
                 if target is None or target == p:
                     fs = spec or None
                 else:
-                    # Healthy shards run the clean inner driver: one disk
-                    # fails, the other P-1 never see the injector at all.
-                    drv = io_driver.split(":", 1)[1]
+                    # Healthy shards run without the injector: one disk
+                    # fails, the other P-1 never see it at all.  Other
+                    # wrappers in the chain (e.g. sanitize:) stay on.
+                    drv = ":".join(w for w in io_driver.split(":")
+                                   if w != "faulty")
             self.shards.append(make_backing(
                 tier, self.m, words, sp, io_driver=drv,
                 io_queue_depth=io_queue_depth,

@@ -37,13 +37,16 @@ import json
 import os
 from typing import Optional
 
-__all__ = ["atomic_write_json", "fsync_dir", "SuperstepCursor"]
+__all__ = ["atomic_replace_file", "atomic_write_json", "fsync_dir",
+           "SuperstepCursor"]
 
 
 def fsync_dir(path: str) -> None:
     """fsync a directory so a just-renamed entry survives power loss."""
     try:
-        fd = os.open(path, os.O_RDONLY)
+        # Directory handle for fsync only — no data bytes move through it,
+        # so there is nothing for the IOLedger to see.
+        fd = os.open(path, os.O_RDONLY)  # pems-lint: disable=block-api-only
     except OSError:
         return                     # e.g. platforms without dir-open support
     try:
@@ -52,23 +55,36 @@ def fsync_dir(path: str) -> None:
         os.close(fd)
 
 
-def atomic_write_json(path: str, obj, durable: bool = True) -> None:
-    """Write ``obj`` as JSON to ``path`` via temp file + rename.
+def atomic_replace_file(path: str, write_fn, binary: bool = False,
+                        durable: bool = True) -> None:
+    """Atomically replace ``path`` with whatever ``write_fn(f)`` writes.
 
-    Readers see either the old contents or the new — never a torn mix.
-    ``durable=True`` additionally fsyncs the temp file and the directory, so
-    the new contents survive power loss; ``durable=False`` skips both fsyncs
-    for advisory state where the rename's atomicity alone is enough.
+    The durability protocol in one place: ``write_fn`` writes into a
+    ``path + ".tmp"`` temp file, which is flushed + fsynced, atomically
+    renamed over ``path``, and the directory fsynced so the rename itself
+    survives power loss.  Readers see either the old contents or the new —
+    never a torn mix.  ``durable=False`` skips both fsyncs for advisory
+    state where the rename's atomicity alone is enough; ``binary=True``
+    opens the temp file in ``"wb"`` mode (e.g. npz stage snapshots).
     """
     tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(obj, f)
+    # Audited raw open: this *is* the durable-state write path (cursor
+    # JSON, stage snapshots) — control state, not ledger-visible backing
+    # data, which must keep flowing through the block API.
+    with open(tmp, "wb" if binary else "w") as f:  # pems-lint: disable=block-api-only
+        write_fn(f)
         if durable:
             f.flush()
             os.fsync(f.fileno())
     os.replace(tmp, path)
     if durable:
         fsync_dir(os.path.dirname(path) or ".")
+
+
+def atomic_write_json(path: str, obj, durable: bool = True) -> None:
+    """Write ``obj`` as JSON to ``path`` via :func:`atomic_replace_file`
+    (temp + fsync + rename + directory fsync when ``durable``)."""
+    atomic_replace_file(path, lambda f: json.dump(obj, f), durable=durable)
 
 
 class SuperstepCursor:

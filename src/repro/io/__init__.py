@@ -32,6 +32,13 @@ from .drivers import (
 )
 from .engine import IOEngine, IORequest, TRANSIENT_ERRNOS
 from .faults import FaultSpec, FaultyFile
+from .npyio import (
+    create_npy_memmap,
+    fsync_file,
+    load_npy_mmap,
+    save_npy_durable,
+)
+from .sanitize import SanitizeFinding, SanitizingFile, collect_findings
 
 __all__ = [
     "ALIGN",
@@ -48,11 +55,18 @@ __all__ = [
     "IO_DRIVERS",
     "MmapFile",
     "ODirectFile",
+    "SanitizeFinding",
+    "SanitizingFile",
     "TRANSIENT_ERRNOS",
     "aligned_empty",
     "align_down",
     "align_up",
+    "collect_findings",
     "crc_bytes",
+    "create_npy_memmap",
     "ensure_file_size",
+    "fsync_file",
+    "load_npy_mmap",
     "open_file",
+    "save_npy_durable",
 ]

@@ -285,7 +285,13 @@ def open_file(path: str, size: Optional[int], driver: str,
     """Driver factory: ``buffered`` | ``odirect`` | ``mmap``, or any of
     them wrapped for fault injection as ``faulty:<inner>`` (the optional
     ``fault_spec`` string selects what to inject — see
-    :mod:`repro.io.faults`)."""
+    :mod:`repro.io.faults`) and/or for in-flight race detection as
+    ``sanitize:<inner>`` (see :mod:`repro.io.sanitize`; wrappers compose,
+    e.g. ``sanitize:faulty:buffered``)."""
+    if driver.startswith("sanitize:"):
+        from .sanitize import SanitizingFile
+        inner = open_file(path, size, driver.split(":", 1)[1], fault_spec)
+        return SanitizingFile(inner)
     if driver.startswith("faulty:"):
         from .faults import FaultSpec, FaultyFile
         inner = open_file(path, size, driver.split(":", 1)[1])
@@ -301,8 +307,8 @@ def open_file(path: str, size: Optional[int], driver: str,
     if driver == "mmap":
         return MmapFile(path, size)
     raise ValueError(
-        f"unknown io driver {driver!r} (choose from {IO_DRIVERS} "
-        "or 'faulty:<driver>')")
+        f"unknown io driver {driver!r} (choose from {IO_DRIVERS}, "
+        "'faulty:<driver>', or 'sanitize:<driver>')")
 
 
 def _buffered_pread(fd: int, mv: memoryview, offset: int) -> int:

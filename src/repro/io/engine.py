@@ -201,6 +201,13 @@ class IOEngine:
                 while self._conflicts(req):
                     self._quiet.wait()
             self._inflight.append(req)
+            # Sanitizer hook (duck-typed, e.g. io.sanitize.SanitizingFile):
+            # fires once the request joins the in-flight set, after any
+            # aligned-conflict serialisation above — so ranges the engine
+            # serialises never co-exist in the sanitizer's view either.
+            note = getattr(self.file, "note_submit", None)
+            if note is not None:
+                note(req)
             if req.op == "read":
                 self._reads += 1
             else:
@@ -259,6 +266,11 @@ class IOEngine:
                 req.attempts = attempt + 1
                 self._bump("permanent_errors", 1)
                 break
+        # Sanitizer hook: the write buffer is still held here, so its
+        # submit-time CRC can be checked against what the worker saw.
+        note = getattr(self.file, "note_complete", None)
+        if note is not None:
+            note(req)
         with self._lock:
             self._inflight.remove(req)
             if req.op == "read":

@@ -1,0 +1,33 @@
+"""pems-lint — repo-invariant static analysis for the PEMS2 codebase.
+
+The conventions that keep the out-of-core path correct are not Python
+semantics, so no general-purpose linter checks them: every byte of backing
+data flows through the block API (else :class:`~repro.core.iostats.IOLedger`
+accounting silently drifts from the Lemma 7.1.7/7.1.9 closed forms), durable
+state is written temp + ``fsync`` + atomic rename, ledger accounting happens
+exactly once per transfer, stage functions that reach the executor's jit
+cache are side-effect free, and buffers handed to the async
+:class:`~repro.io.engine.IOEngine` are not touched while a request is in
+flight.
+
+``python -m repro.lint <paths>`` runs one AST visitor pass per rule over
+every ``.py`` file under the given paths.  Findings are suppressed per line
+with ``# pems-lint: disable=<rule>[,<rule>|all]`` (same line, or a
+comment-only line directly above) or grandfathered via a committed JSON
+baseline (``pems_lint_baseline.json``); anything else fails the run.
+``docs/ARCHITECTURE.md`` ("Invariants") records the incident behind each
+rule.  The static ``submit-then-mutate`` rule has a runtime twin: the
+``io_driver="sanitize:<inner>"`` wrapper (:mod:`repro.io.sanitize`).
+"""
+
+from .engine import Finding, LintError, Rule, lint_paths, load_baseline
+from .rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "LintError",
+    "Rule",
+    "lint_paths",
+    "load_baseline",
+]

@@ -1,0 +1,89 @@
+"""CLI: ``python -m repro.lint [paths...]`` (also ``scripts/pems_lint.py``).
+
+Exit status 0 when every finding is suppressed or baselined, 1 otherwise,
+2 on usage/parse errors.  ``--json`` emits a machine-readable report;
+``--write-baseline`` grandfathers the current findings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .engine import LintError, lint_paths, load_baseline, save_baseline
+from .rules import ALL_RULES
+
+_DEFAULT_BASELINE = "pems_lint_baseline.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Run the linter; returns the process exit status."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="pems-lint: repo-invariant static analysis "
+                    "(see docs/ARCHITECTURE.md 'Invariants')")
+    ap.add_argument("paths", nargs="*", default=["src", "scripts"],
+                    help="files/directories to lint (default: src scripts)")
+    ap.add_argument("--rules", default=None, metavar="R1,R2",
+                    help="run only these rule ids")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids + summaries and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a JSON report instead of human lines")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="grandfather findings recorded in FILE "
+                         f"(default: {_DEFAULT_BASELINE} if present)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current findings to the baseline file "
+                         "and exit 0")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.name}: {rule.summary}")
+        return 0
+
+    rules = list(ALL_RULES)
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {r.name for r in ALL_RULES}
+        if not wanted <= known:
+            print(f"pems-lint: unknown rule(s) {sorted(wanted - known)} "
+                  f"(known: {sorted(known)})", file=sys.stderr)
+            return 2
+        rules = [r for r in ALL_RULES if r.name in wanted]
+
+    baseline_path = args.baseline or _DEFAULT_BASELINE
+    try:
+        findings, suppressed = lint_paths(args.paths or ["src", "scripts"],
+                                          rules)
+        if args.write_baseline:
+            save_baseline(baseline_path, findings)
+            print(f"pems-lint: wrote {len(findings)} finding(s) to "
+                  f"{baseline_path}")
+            return 0
+        baseline = load_baseline(args.baseline
+                                 if args.baseline else baseline_path)
+    except LintError as e:
+        print(f"pems-lint: {e}", file=sys.stderr)
+        return 2
+
+    new = [f for f in findings if f.key() not in baseline]
+    baselined = len(findings) - len(new)
+
+    if args.as_json:
+        print(json.dumps({"findings": [f.to_json() for f in new],
+                          "baselined": baselined,
+                          "suppressed": suppressed}, indent=2))
+    else:
+        for f in new:
+            print(f.format())
+        print(f"pems-lint: {len(new)} finding(s) "
+              f"({baselined} baselined, {suppressed} suppressed)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Small AST helpers shared by the rules (dotted-name resolution, scope
+walking, buffer-expression normalisation)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional
+
+__all__ = ["dotted", "base_name", "normalize", "open_mode_is_binary",
+           "keyword_arg", "function_scopes", "local_functions",
+           "scope_calls"]
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """The dotted name of an expression (``os.replace``,
+    ``np.lib.format.open_memmap``, bare ``open``) or None when the chain
+    does not bottom out in a plain name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def base_name(node: ast.AST) -> Optional[str]:
+    """The leftmost plain name under an expression — ``buf`` for
+    ``buf[a:b].view(...)`` — or None (calls/literals have no stable base)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def normalize(node: ast.AST) -> str:
+    """Structural fingerprint of an expression: two occurrences of the same
+    source expression normalise identically (``ast.dump`` without
+    positions)."""
+    return ast.dump(node, annotate_fields=False)
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    """The value of keyword argument ``name``, or None."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def open_mode_is_binary(call: ast.Call) -> bool:
+    """True when an ``open()`` call's mode (positional arg 2 or ``mode=``)
+    is a string literal containing ``'b'`` — or is not a literal at all,
+    which is conservatively treated as possibly-binary."""
+    mode: Optional[ast.expr] = None
+    if len(call.args) >= 2:
+        mode = call.args[1]
+    kw = keyword_arg(call, "mode")
+    if kw is not None:
+        mode = kw
+    if mode is None:
+        return False
+    if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+        return "b" in mode.value
+    return True
+
+
+def function_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """Every analysis scope in the module: the module itself plus each
+    (async) function definition, however nested."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def local_functions(tree: ast.Module) -> Dict[str, List[ast.AST]]:
+    """Name -> (async) function definitions anywhere in the module, nested
+    defs included (lambdas have no name and are excluded)."""
+    out: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def scope_calls(scope: ast.AST) -> Iterator[ast.Call]:
+    """Call nodes inside ``scope``, excluding those inside nested function
+    definitions (which are their own scopes)."""
+    body = scope.body if isinstance(scope, ast.Module) else scope.body
+    stack: List[ast.AST] = list(body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))

@@ -1,0 +1,175 @@
+"""Rule engine: file collection, suppression comments, baseline filtering.
+
+Stdlib-only (``ast``/``json``/``re``) so the CI job needs no install step —
+the same property :mod:`scripts.check_docs` relies on.  Each rule is one
+:class:`ast.NodeVisitor`-style pass; the engine parses every file once and
+hands the tree to each rule through a :class:`FileContext`.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "FileContext", "LintError", "Rule", "collect_files",
+           "lint_paths", "load_baseline", "save_baseline"]
+
+# Same-line (or comment-only line directly above) suppression:
+#   x = open(p, "rb")  # pems-lint: disable=block-api-only
+#   # pems-lint: disable=ledger-balance,atomic-durability
+_SUPPRESS_RE = re.compile(r"#\s*pems-lint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+class LintError(RuntimeError):
+    """A file could not be linted (unreadable, syntax error)."""
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line:col``."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> Tuple[str, str, int]:
+        """Identity for baseline matching: (rule, path, line)."""
+        return (self.rule, self.path, self.line)
+
+    def format(self) -> str:
+        """The human-readable one-liner (``path:line:col: rule: message``)."""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+    def to_json(self) -> dict:
+        """JSON-serialisable dict (also the baseline entry shape)."""
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+class Rule:
+    """Base class: one named invariant checked by one AST pass.
+
+    Subclasses set ``name`` (the id used in suppressions/baselines/CLI) and
+    ``summary`` (one line for ``--list-rules`` and the docs), and implement
+    :meth:`check` returning raw findings — the engine applies suppressions
+    and the baseline afterwards.
+    """
+
+    name: str = ""
+    summary: str = ""
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "FileContext", node: ast.AST,
+                message: str) -> Finding:
+        """A :class:`Finding` for this rule anchored at ``node``."""
+        return Finding(self.name, ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+class FileContext:
+    """One parsed file handed to every rule: path, source lines, AST, and
+    the per-line suppression table."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        try:
+            self.tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            raise LintError(f"{path}: cannot parse: {e}") from e
+        self._suppress: Dict[int, Set[str]] = {}
+        for i, ln in enumerate(self.lines, 1):
+            m = _SUPPRESS_RE.search(ln)
+            if m:
+                self._suppress[i] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()}
+
+    def path_is_under(self, *fragments: str) -> bool:
+        """True when this file lives under any of the given path fragments
+        (matched against the /-normalised path, e.g. ``"repro/io/"``)."""
+        return any(f in self.path for f in fragments)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True when ``rule`` is disabled on ``line`` — by a trailing
+        comment on the line itself, or by a comment-only line directly
+        above it."""
+        on_line = self._suppress.get(line)
+        if on_line and (rule in on_line or "all" in on_line):
+            return True
+        above = self._suppress.get(line - 1)
+        if above and (rule in above or "all" in above):
+            text = self.lines[line - 2].lstrip() if line >= 2 else ""
+            return text.startswith("#")
+        return False
+
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted list of ``.py`` files,
+    skipping hidden directories and ``__pycache__``."""
+    out: Set[str] = set()
+    for p in paths:
+        if os.path.isfile(p):
+            out.add(p)
+            continue
+        if not os.path.isdir(p):
+            raise LintError(f"no such file or directory: {p!r}")
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if not d.startswith(".") and d != "__pycache__"]
+            out.update(os.path.join(root, f) for f in files
+                       if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_paths(paths: Sequence[str], rules: Sequence[Rule],
+               ) -> Tuple[List[Finding], int]:
+    """Run ``rules`` over every ``.py`` file under ``paths``.
+
+    Returns ``(findings, suppressed_count)`` — findings are
+    suppression-filtered but *not* baseline-filtered (the caller owns the
+    baseline so ``--write-baseline`` can see everything).
+    """
+    findings: List[Finding] = []
+    suppressed = 0
+    for fn in collect_files(paths):
+        with open(fn, encoding="utf-8") as f:
+            ctx = FileContext(fn, f.read())
+        for rule in rules:
+            for fd in rule.check(ctx):
+                if ctx.suppressed(fd.rule, fd.line):
+                    suppressed += 1
+                else:
+                    findings.append(fd)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, suppressed
+
+
+def load_baseline(path: Optional[str]) -> Set[Tuple[str, str, int]]:
+    """The committed grandfather list as a set of (rule, path, line) keys.
+    A missing/None path is an empty baseline."""
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise LintError(f"baseline {path!r}: expected a JSON list")
+    return {(e["rule"], e["path"], int(e["line"])) for e in entries}
+
+
+def save_baseline(path: str, findings: Sequence[Finding]) -> None:
+    """Write ``findings`` as the new baseline (sorted, one entry per
+    finding, messages included for reviewability)."""
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump([fd.to_json() for fd in findings], f, indent=2,
+                  sort_keys=True)
+        f.write("\n")

@@ -1,0 +1,22 @@
+"""The five repo-grown rules, one module per rule.
+
+``ALL_RULES`` is the registry the CLI and tests iterate; rule ids are the
+strings used in suppression comments and the baseline file.
+"""
+
+from .block_api import BlockApiOnly
+from .durability import AtomicDurability
+from .ledger import LedgerBalance
+from .submit_mutate import SubmitThenMutate
+from .trace_purity import TracePurity
+
+ALL_RULES = (
+    BlockApiOnly(),
+    AtomicDurability(),
+    LedgerBalance(),
+    TracePurity(),
+    SubmitThenMutate(),
+)
+
+__all__ = ["ALL_RULES", "AtomicDurability", "BlockApiOnly", "LedgerBalance",
+           "SubmitThenMutate", "TracePurity"]

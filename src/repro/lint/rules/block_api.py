@@ -1,0 +1,67 @@
+"""Rule ``block-api-only``: raw byte-level disk access stays in the io
+layer.
+
+Every byte of backing data is supposed to flow through the block API
+(``read_block``/``write_block`` on a backing, or the ``field*``/
+``with_field*`` store accessors above it) so :class:`repro.core.iostats.
+IOLedger` measured counters stay comparable to the Lemma 7.1.7/7.1.9
+modeled ones.  A stray ``np.memmap``/binary ``open()``/``os.pread`` outside
+``repro/io/`` + ``core/backing.py`` moves bytes the ledger never sees —
+exactly the drift this rule exists to stop.  Durable-state helpers
+(cursor/snapshot writes in ``core/recovery.py``) carry audited per-line
+suppressions instead: their bytes are control state, not backing data.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..astutil import dotted, keyword_arg, open_mode_is_binary
+from ..engine import FileContext, Finding, Rule
+
+# Paths allowed to touch bytes directly: the driver/engine layer itself and
+# the backing that adapts it to the block API.
+_ALLOWED = ("repro/io/", "core/backing.py")
+
+_RAW_OS = {"os.open", "os.pread", "os.preadv", "os.pwrite", "os.pwritev"}
+_MEMMAP = {"np.memmap", "numpy.memmap",
+           "np.lib.format.open_memmap", "numpy.lib.format.open_memmap"}
+_NP_LOAD = {"np.load", "numpy.load"}
+
+
+class BlockApiOnly(Rule):
+    name = "block-api-only"
+    summary = ("raw open()/np.memmap/os.pread-style disk access outside "
+               "repro/io/ + core/backing.py bypasses IOLedger accounting")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.path_is_under(*_ALLOWED):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name in _RAW_OS or name in _MEMMAP:
+                yield self.finding(
+                    ctx, node,
+                    f"raw disk access '{name}' outside the io layer — "
+                    "route through the block API (backing read_block/"
+                    "write_block) or a repro.io helper so the transfer is "
+                    "ledger-accounted")
+            elif name == "open" and open_mode_is_binary(node):
+                yield self.finding(
+                    ctx, node,
+                    "binary open() outside the io layer — backing bytes "
+                    "must flow through the block API; durable control "
+                    "state belongs in repro.core.recovery's atomic "
+                    "helpers")
+            elif name in _NP_LOAD:
+                mm = keyword_arg(node, "mmap_mode")
+                if mm is not None and not (isinstance(mm, ast.Constant)
+                                           and mm.value is None):
+                    yield self.finding(
+                        ctx, node,
+                        "np.load(mmap_mode=...) maps a file outside the io "
+                        "layer — use repro.io.npyio.load_npy_mmap (or the "
+                        "block API) so raw mappings stay auditable")

@@ -1,0 +1,59 @@
+"""Rule ``atomic-durability``: renames of durable state are fsync-dominated.
+
+The durability protocol (PR 6's checkpoint manifests and superstep cursor)
+is temp-write → ``fsync`` the temp file → ``os.replace`` → ``fsync`` the
+directory.  A rename with no fsync anywhere before it in the same function
+publishes a name whose *contents* may still be in the page cache — a crash
+then yields exactly the torn state the atomic rename was supposed to
+prevent.  The check is lexical and per-scope: any ``os.replace``/
+``os.rename`` must be preceded (by line) in its function by an fsync-like
+call (``os.fsync``, ``fsync_dir``, ``fsync_file``, an ``.fsync()`` method,
+or one of the ``atomic_*`` recovery helpers that fsync internally).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..astutil import dotted, function_scopes, scope_calls
+from ..engine import FileContext, Finding, Rule
+
+_RENAMES = {"os.replace", "os.rename"}
+# A call satisfying durability when it appears earlier in the same scope.
+_FSYNC_NAMES = {"fsync", "fsync_dir", "fsync_file",
+                "atomic_write_json", "atomic_replace_file"}
+
+
+def _last_name(node: ast.expr) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+class AtomicDurability(Rule):
+    name = "atomic-durability"
+    summary = ("os.replace/os.rename without a preceding fsync in the same "
+               "function can publish torn durable state after a crash")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for scope in function_scopes(ctx.tree):
+            renames: List[ast.Call] = []
+            fsync_lines: List[int] = []
+            for call in scope_calls(scope):
+                name = dotted(call.func)
+                if name in _RENAMES:
+                    renames.append(call)
+                elif _last_name(call.func) in _FSYNC_NAMES:
+                    fsync_lines.append(call.lineno)
+            for call in renames:
+                if not any(ln < call.lineno for ln in fsync_lines):
+                    yield self.finding(
+                        ctx, call,
+                        f"{dotted(call.func)} with no fsync earlier in the "
+                        "same function — durable state must be written "
+                        "temp + fsync + atomic rename (+ directory fsync); "
+                        "use repro.core.recovery.atomic_replace_file / "
+                        "atomic_write_json")

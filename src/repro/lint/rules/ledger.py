@@ -1,0 +1,84 @@
+"""Rule ``ledger-balance``: every block transfer is accounted exactly once.
+
+Two failure shapes, both per function scope:
+
+* **missing** — a direct ``read_block``/``write_block`` call with no ledger
+  accounting anywhere in the function.  The backing's block API moves raw
+  bytes; the convention (see ``core/collectives.py``) is that direct
+  callers pair each transfer with ``_account_disk``/``add_disk_*``/
+  ``add_tier_*``.
+* **double-count** — a function that reaches data through the
+  *self-accounting* store accessors (``field``/``field_rows``/
+  ``with_field``/``with_field_rows``, which bill the ledger internally via
+  ``TieredStore._account``) *and* manually bumps ``add_disk_read``/
+  ``add_disk_write``: the same bytes billed twice, breaking the
+  measured-vs-modeled comparisons the experiment tables pin.
+
+``core/backing.py`` and ``repro/io/`` are exempt — they *implement* the
+accounting.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..astutil import function_scopes, scope_calls
+from ..engine import FileContext, Finding, Rule
+
+_ALLOWED = ("repro/io/", "core/backing.py")
+
+_BLOCK = {"read_block", "write_block"}
+_ACCOUNTING = {"add_disk_read", "add_disk_write", "add_tier_in",
+               "add_tier_out", "_account", "_account_disk"}
+_SELF_ACCOUNTING = {"field", "field_rows", "with_field", "with_field_rows"}
+_MANUAL_DISK = {"add_disk_read", "add_disk_write"}
+
+
+def _attr(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return ""
+
+
+class LedgerBalance(Rule):
+    name = "ledger-balance"
+    summary = ("block-API transfers must be ledger-accounted exactly once: "
+               "no unaccounted read_block/write_block, no manual add_disk_* "
+               "next to self-accounting store accessors")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.path_is_under(*_ALLOWED):
+            return
+        for scope in function_scopes(ctx.tree):
+            blocks: List[ast.Call] = []
+            manual: List[ast.Call] = []
+            has_acct = False
+            has_self_acct = False
+            for call in scope_calls(scope):
+                a = _attr(call)
+                if a in _BLOCK:
+                    blocks.append(call)
+                if a in _ACCOUNTING:
+                    has_acct = True
+                if a in _SELF_ACCOUNTING:
+                    has_self_acct = True
+                if a in _MANUAL_DISK:
+                    manual.append(call)
+            if blocks and not has_acct:
+                yield self.finding(
+                    ctx, blocks[0],
+                    f"direct {_attr(blocks[0])} with no ledger accounting "
+                    "in this function — pair the transfer with "
+                    "_account_disk/add_disk_*/add_tier_* (see "
+                    "core/collectives.py for the convention), or reach the "
+                    "data through the self-accounting store accessors")
+            if has_self_acct and manual:
+                yield self.finding(
+                    ctx, manual[0],
+                    f"manual {_attr(manual[0])} in a function that also "
+                    "uses self-accounting store accessors (field*/"
+                    "with_field* bill the ledger internally) — the same "
+                    "bytes would be counted twice")

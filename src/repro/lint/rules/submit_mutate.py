@@ -1,0 +1,165 @@
+"""Rule ``submit-then-mutate``: buffers stay frozen while a request flies.
+
+``IOEngine.submit_read``/``submit_write`` return immediately; the worker
+touches the buffer *later*.  Mutating the buffer (or submitting the same
+byte range again) before the matching ``wait``/``drain``/``poll`` is a
+data race the engine cannot see — the exact hazard class the asynchronous
+I/O refinement introduces, and the reason the runtime twin
+(``io_driver="sanitize:<inner>"``, :mod:`repro.io.sanitize`) exists.
+
+Intraprocedural, single-pass dataflow in source-line order: a submit
+registers its buffer expression; a barrier (``wait``/``drain``/``poll``/
+``fsync``/``close`` on anything) clears all registrations; in between, the
+rule flags
+
+* in-place mutation of a tracked base name (``buf[...] = ...``,
+  ``buf += ...``, ``buf.fill(...)``, ``np.copyto(buf, ...)``) when the
+  whole name was submitted or the identical subscript expression was,
+* re-submission of the *identical* buffer expression (overlapping
+  in-flight requests on the same range).
+
+Loop back-edges are not modeled — disjoint chunked submit loops (the
+``FileBacking._read_rows`` pattern) stay clean; the runtime sanitizer
+covers the dynamic cases.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+from ..astutil import base_name, dotted, function_scopes, normalize
+from ..engine import FileContext, Finding, Rule
+
+_SUBMITS = {"submit_read", "submit_write"}
+_BARRIERS = {"wait", "drain", "poll", "fsync", "close"}
+_MUTATING_METHODS = {"fill", "sort", "put", "byteswap", "partition",
+                     "resize", "setfield"}
+
+
+@dataclass
+class _InFlight:
+    op: str
+    base: Optional[str]     # leftmost name of the buffer expression
+    fingerprint: str        # normalize() of the buffer expression
+    whole_name: bool        # the bare name itself was submitted
+    line: int
+
+
+def _buffer_arg(call: ast.Call) -> Optional[ast.expr]:
+    # submit_read(offset, out) / submit_write(offset, data): buffer is the
+    # second positional or the out=/data= keyword.
+    if len(call.args) >= 2:
+        return call.args[1]
+    for kw in call.keywords:
+        if kw.arg in ("out", "data"):
+            return kw.value
+    return None
+
+
+class SubmitThenMutate(Rule):
+    name = "submit-then-mutate"
+    summary = ("a buffer handed to submit_read/submit_write must not be "
+               "mutated or re-submitted before the matching "
+               "wait/drain/poll")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for scope in function_scopes(ctx.tree):
+            yield from self._check_scope(ctx, scope)
+
+    # ------------------------------------------------------------------ scope
+    def _events(self, scope: ast.AST) -> List[Tuple[int, int, ast.AST]]:
+        """Relevant nodes in source order, nested defs excluded."""
+        out: List[Tuple[int, int, ast.AST]] = []
+        stack: List[ast.AST] = list(scope.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, (ast.Call, ast.Assign, ast.AugAssign)):
+                out.append((node.lineno, node.col_offset, node))
+            stack.extend(ast.iter_child_nodes(node))
+        out.sort(key=lambda t: (t[0], t[1]))
+        return out
+
+    def _check_scope(self, ctx: FileContext, scope: ast.AST
+                     ) -> Iterator[Finding]:
+        tracked: List[_InFlight] = []
+        for _, _, node in self._events(scope):
+            if isinstance(node, ast.Call):
+                attr = (node.func.attr
+                        if isinstance(node.func, ast.Attribute) else "")
+                if attr in _BARRIERS:
+                    tracked.clear()
+                elif attr in _SUBMITS:
+                    yield from self._on_submit(ctx, node, attr, tracked)
+                elif attr in _MUTATING_METHODS:
+                    yield from self._on_mutation(
+                        ctx, node, base_name(node.func.value),
+                        f".{attr}(...)", tracked)
+                elif dotted(node.func) in ("np.copyto", "numpy.copyto") \
+                        and node.args:
+                    yield from self._on_mutation(
+                        ctx, node, base_name(node.args[0]), "np.copyto",
+                        tracked)
+            else:
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Subscript):
+                        yield from self._on_store(ctx, node, t, tracked)
+                    elif (isinstance(node, ast.AugAssign)
+                            and isinstance(t, ast.Name)):
+                        # buf += x mutates ndarrays in place.
+                        yield from self._on_mutation(
+                            ctx, node, t.id, "augmented assignment", tracked)
+
+    # ------------------------------------------------------------------ events
+    def _on_submit(self, ctx: FileContext, call: ast.Call, attr: str,
+                   tracked: List[_InFlight]) -> Iterator[Finding]:
+        buf = _buffer_arg(call)
+        if buf is None:
+            return
+        fp = normalize(buf)
+        for t in tracked:
+            if t.fingerprint == fp and "write" in (t.op, attr.split("_")[1]):
+                yield self.finding(
+                    ctx, call,
+                    f"re-submission of the buffer range already in flight "
+                    f"from {attr.split('_')[1]} submit at line {t.line} — "
+                    "overlapping unserialized requests race; wait/drain "
+                    "the first request before resubmitting")
+        tracked.append(_InFlight(
+            op=attr.split("_")[1], base=base_name(buf), fingerprint=fp,
+            whole_name=isinstance(buf, ast.Name), line=call.lineno))
+
+    def _on_store(self, ctx: FileContext, node: ast.AST, tgt: ast.Subscript,
+                  tracked: List[_InFlight]) -> Iterator[Finding]:
+        base = base_name(tgt)
+        fp = normalize(tgt)
+        for t in tracked:
+            if t.base is not None and t.base == base and (
+                    t.whole_name or t.fingerprint == fp):
+                yield self.finding(
+                    ctx, node,
+                    f"write to '{base}[...]' while a {t.op} of it "
+                    f"submitted at line {t.line} is still in flight — "
+                    "wait/drain first (runtime twin: "
+                    "io_driver='sanitize:<inner>')")
+                return
+
+    def _on_mutation(self, ctx: FileContext, node: ast.AST,
+                     base: Optional[str], what: str,
+                     tracked: List[_InFlight]) -> Iterator[Finding]:
+        if base is None:
+            return
+        for t in tracked:
+            if t.base == base and t.whole_name:
+                yield self.finding(
+                    ctx, node,
+                    f"{what} mutates '{base}' while a {t.op} of it "
+                    f"submitted at line {t.line} is still in flight — "
+                    "wait/drain first (runtime twin: "
+                    "io_driver='sanitize:<inner>')")
+                return

@@ -1,0 +1,84 @@
+"""Rule ``trace-purity``: stage functions reaching the jit cache stay pure.
+
+The tiered executor caches one jitted body per stage-function identity
+(``_tiered_body``), so a stage function's Python body runs **once at trace
+time**, not once per superstep.  Any Python-level side effect inside it —
+an ``IOLedger``/``TierStats`` bump, host I/O, a ``.item()`` host sync, a
+mutation of a closed-over object — either silently happens exactly once
+(wrong counters) or defeats the cache and retraces every call (the
+1.23 s-per-superstep regression PR 8's cache fixed).  Stage functions are
+found syntactically: any local function passed by name as an argument to a
+``*.superstep(...)`` call.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from ..astutil import dotted, local_functions
+from ..engine import FileContext, Finding, Rule
+
+_HOST_CALLS = {"print", "open", "input"}
+_HOST_PREFIXES = ("os.", "time.", "np.save", "numpy.save", "np.load",
+                  "numpy.load", "np.fromfile", "numpy.fromfile")
+
+
+class TracePurity(Rule):
+    name = "trace-purity"
+    summary = ("Python side effects (ledger bumps, host I/O, .item(), "
+               "attribute mutation) inside stage functions run at trace "
+               "time only, or force a retrace per superstep")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        defs = local_functions(ctx.tree)
+        stage_fns: Set[ast.AST] = set()
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "superstep"):
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Name) and arg.id in defs:
+                    stage_fns.update(defs[arg.id])
+        for fn in stage_fns:
+            yield from self._check_stage(ctx, fn)
+
+    def _check_stage(self, ctx: FileContext, fn: ast.AST
+                     ) -> Iterator[Finding]:
+        where = f"stage function '{fn.name}'"
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"):
+                    yield self.finding(
+                        ctx, node,
+                        f".item() inside {where} forces a host sync at "
+                        "trace time — return the value and reduce outside "
+                        "the staged body")
+                    continue
+                name = dotted(node.func) or ""
+                if name in _HOST_CALLS or name.startswith(_HOST_PREFIXES):
+                    yield self.finding(
+                        ctx, node,
+                        f"host call '{name}' inside {where} runs once at "
+                        "trace time, not per superstep — hoist it out of "
+                        "the staged body")
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr.startswith("add_")):
+                    yield self.finding(
+                        ctx, node,
+                        f"ledger/stats bump '.{node.func.attr}(...)' inside "
+                        f"{where} fires at trace time only — account in "
+                        "the executor (e.g. _ledger_superstep), never in "
+                        "the staged body")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute):
+                        yield self.finding(
+                            ctx, t,
+                            f"attribute mutation inside {where} is a "
+                            "Python side effect the jit cache will not "
+                            "replay — stage functions must be pure")

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ContextLayout, Pems, PemsConfig, SuperstepCursor
+from repro.core import (ContextLayout, Pems, PemsConfig, SuperstepCursor,
+                        atomic_replace_file)
 from repro.kernels.bitonic_sort import bitonic_sort
 from repro.kernels.kway_merge import kway_merge
 from .common import INT_MAX, group_by_dest
@@ -368,12 +369,9 @@ def _save_snapshot(state_dir: str, stage: int, fields: dict,
     fields (restored before a dirty rerun — see STAGE_SNAPSHOT_FIELDS).
     At ``nprocs > 1`` the fields hold process ``proc``'s shard rows only."""
     path = _snapshot_path(state_dir, proc, nprocs)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, __stage__=np.int64(stage), **fields)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    atomic_replace_file(
+        path, lambda f: np.savez(f, __stage__=np.int64(stage), **fields),
+        binary=True)
 
 
 def _load_snapshot(state_dir: str, stage: int,

@@ -1,0 +1,8 @@
+"""Fixture: fires block-api-only exactly once (raw np.memmap outside the
+io layer)."""
+
+import numpy as np
+
+
+def load_raw(path):
+    return np.memmap(path, dtype=np.uint8, mode="r")

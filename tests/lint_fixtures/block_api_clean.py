@@ -1,0 +1,11 @@
+"""Clean twin of block_api_bad: the same data reached through the
+self-accounting store accessor and a text-mode open — no findings."""
+
+
+def load_via_store(store, rho):
+    return store.field_rows("keys", rho, rho + 1)
+
+
+def read_report(path):
+    with open(path) as f:
+        return f.read()

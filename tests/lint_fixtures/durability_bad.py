@@ -1,0 +1,12 @@
+"""Fixture: fires atomic-durability exactly once (rename with no fsync
+anywhere before it in the function)."""
+
+import json
+import os
+
+
+def save_state(path, obj):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)

@@ -1,0 +1,14 @@
+"""Clean twin of durability_bad: temp + fsync + atomic rename — no
+findings."""
+
+import json
+import os
+
+
+def save_state(path, obj):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

@@ -1,0 +1,9 @@
+"""Fixture: fires ledger-balance exactly once (a direct read_block with no
+accounting call anywhere in the function)."""
+
+
+def scan(backing, v):
+    total = 0
+    for r0 in range(0, v, 4):
+        total += int(backing.read_block(r0, r0 + 4).sum())
+    return total

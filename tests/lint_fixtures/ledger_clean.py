@@ -1,0 +1,14 @@
+"""Clean twin of ledger_bad/ledger_double_bad: a direct block transfer
+paired with accounting, and a self-accounting accessor left alone."""
+
+
+def scan_direct(backing, ledger, v, rowbytes):
+    total = 0
+    for r0 in range(0, v, 4):
+        total += int(backing.read_block(r0, r0 + 4).sum())
+        ledger.add_disk_read(4 * rowbytes)
+    return total
+
+
+def scan_store(store, rho):
+    return store.field_rows("keys", rho, rho + 1)

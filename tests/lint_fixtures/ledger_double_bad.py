@@ -1,0 +1,8 @@
+"""Fixture: fires ledger-balance exactly once (manual add_disk_read next
+to a self-accounting store accessor — the same bytes billed twice)."""
+
+
+def scan(store, ledger, rho, rowbytes):
+    vals = store.field_rows("keys", rho, rho + 1)
+    ledger.add_disk_read(rowbytes)
+    return vals

@@ -1,0 +1,8 @@
+"""Fixture: fires submit-then-mutate exactly once (buffer stored to while
+its write is still in flight)."""
+
+
+def writeback(engine, buf):
+    engine.submit_write(0, buf)
+    buf[0] = 1
+    engine.drain()

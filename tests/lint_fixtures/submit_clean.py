@@ -1,0 +1,16 @@
+"""Clean twin of submit_bad: the mutation waits for the drain, and a
+chunked submit loop over disjoint slices stays clean."""
+
+
+def writeback(engine, buf):
+    engine.submit_write(0, buf)
+    engine.drain()
+    buf[0] = 1
+
+
+def chunked_read(engine, flat, nbytes, chunk):
+    reqs = []
+    for off in range(0, nbytes, chunk):
+        reqs.append(engine.submit_read(off, flat[off:off + chunk]))
+    engine.wait(reqs)
+    return flat

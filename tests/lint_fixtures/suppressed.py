@@ -1,0 +1,18 @@
+"""Fixture: one violation per suppression style — all suppressed, so the
+file lints clean (the suppression round-trip test also re-lints it with
+suppressions stripped to prove they were load-bearing)."""
+
+import numpy as np
+
+
+def load_raw_same_line(path):
+    return np.memmap(path, mode="r")  # pems-lint: disable=block-api-only
+
+
+def load_raw_line_above(path):
+    # pems-lint: disable=block-api-only
+    return np.memmap(path, mode="r")
+
+
+def load_raw_disable_all(path):
+    return np.memmap(path, mode="r")  # pems-lint: disable=all

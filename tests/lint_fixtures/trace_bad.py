@@ -1,0 +1,12 @@
+"""Fixture: fires trace-purity exactly once (.item() host sync inside a
+stage function passed to superstep)."""
+
+
+def local_total(rho, ctx):
+    total = ctx.get("x").sum().item()
+    return ctx.set("total", total)
+
+
+def run(pems, store):
+    return pems.superstep(store, local_total, reads=["x"],
+                          writes=["total"])

@@ -1,0 +1,11 @@
+"""Clean twin of trace_bad: the stage function stays traced end to end —
+no findings."""
+
+
+def local_total(rho, ctx):
+    return ctx.set("total", ctx.get("x").sum())
+
+
+def run(pems, store):
+    return pems.superstep(store, local_total, reads=["x"],
+                          writes=["total"])

@@ -1,0 +1,143 @@
+"""pems-lint acceptance: every rule fires on its seeded fixture (rule id +
+file:line) and stays silent on the clean twin, suppressions work in all
+three styles, the baseline round-trips, and the committed tree is clean
+with an empty baseline."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.lint import ALL_RULES, lint_paths, load_baseline
+from repro.lint.engine import save_baseline
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_FIXTURES = os.path.join(_ROOT, "tests", "lint_fixtures")
+
+
+def _lint(*paths, rules=ALL_RULES):
+    return lint_paths([os.path.join(_FIXTURES, p) for p in paths], rules)
+
+
+# --------------------------------------------------------------------------- #
+# One rule per seeded fixture, zero on the clean twin                          #
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("fixture, rule, line", [
+    ("block_api_bad.py", "block-api-only", 8),
+    ("durability_bad.py", "atomic-durability", 12),
+    ("ledger_bad.py", "ledger-balance", 8),
+    ("ledger_double_bad.py", "ledger-balance", 7),
+    ("trace_bad.py", "trace-purity", 6),
+    ("submit_bad.py", "submit-then-mutate", 7),
+])
+def test_seeded_fixture_fires_exactly_one_rule(fixture, rule, line):
+    findings, suppressed = _lint(fixture)
+    assert len(findings) == 1, [f.format() for f in findings]
+    f = findings[0]
+    assert (f.rule, f.line) == (rule, line), f.format()
+    assert f.path.endswith(fixture)
+    assert suppressed == 0
+    # The human format carries rule id and file:line for CI logs.
+    assert f"{f.line}:" in f.format() and rule in f.format()
+
+
+@pytest.mark.parametrize("fixture", [
+    "block_api_clean.py", "durability_clean.py", "ledger_clean.py",
+    "trace_clean.py", "submit_clean.py",
+])
+def test_clean_twin_fires_nothing(fixture):
+    findings, _ = _lint(fixture)
+    assert findings == [], [f.format() for f in findings]
+
+
+# --------------------------------------------------------------------------- #
+# Suppressions                                                                 #
+# --------------------------------------------------------------------------- #
+
+def test_suppression_styles_all_work():
+    """Same-line, comment-line-above, and disable=all each silence their
+    violation; stripping the comments proves they were load-bearing."""
+    findings, suppressed = _lint("suppressed.py")
+    assert findings == [] and suppressed == 3
+
+    from repro.lint.engine import FileContext
+    src = open(os.path.join(_FIXTURES, "suppressed.py")).read()
+    stripped = "\n".join(ln.split("# pems-lint:")[0].rstrip() or "#"
+                         for ln in src.splitlines())
+    ctx = FileContext("suppressed_stripped.py", stripped)
+    raw = [f for rule in ALL_RULES for f in rule.check(ctx)]
+    assert len(raw) == 3
+
+
+def test_suppression_requires_matching_rule(tmp_path):
+    """A disable= comment naming a different rule does not silence."""
+    p = tmp_path / "wrong.py"
+    p.write_text("import numpy as np\n\n\ndef f(path):\n"
+                 "    return np.memmap(path)"
+                 "  # pems-lint: disable=ledger-balance\n")
+    findings, suppressed = lint_paths([str(p)], ALL_RULES)
+    assert [f.rule for f in findings] == ["block-api-only"]
+    assert suppressed == 0
+
+
+# --------------------------------------------------------------------------- #
+# Baseline round-trip                                                          #
+# --------------------------------------------------------------------------- #
+
+def test_baseline_round_trip(tmp_path):
+    findings, _ = _lint("block_api_bad.py", "durability_bad.py")
+    assert len(findings) == 2
+    bl = str(tmp_path / "baseline.json")
+    save_baseline(bl, findings)
+    keys = load_baseline(bl)
+    assert keys == {f.key() for f in findings}
+    # Everything baselined -> nothing new.
+    assert [f for f in findings if f.key() not in keys] == []
+    # A fresh violation is still new against the old baseline.
+    more, _ = _lint("block_api_bad.py", "durability_bad.py",
+                    "ledger_bad.py")
+    new = [f for f in more if f.key() not in keys]
+    assert [f.rule for f in new] == ["ledger-balance"]
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == set()
+    assert load_baseline(None) == set()
+
+
+# --------------------------------------------------------------------------- #
+# CLI + the committed tree                                                     #
+# --------------------------------------------------------------------------- #
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "scripts", "pems_lint.py"),
+         *args],
+        capture_output=True, text=True, timeout=120, cwd=_ROOT)
+
+
+def test_cli_exit_codes_and_json():
+    bad = os.path.join("tests", "lint_fixtures", "block_api_bad.py")
+    r = _run_cli(bad)
+    assert r.returncode == 1
+    assert "block-api-only" in r.stdout and "block_api_bad.py:8" in r.stdout
+    r = _run_cli(bad, "--json")
+    report = json.loads(r.stdout)
+    assert report["findings"][0]["rule"] == "block-api-only"
+    r = _run_cli("--list-rules")
+    assert r.returncode == 0
+    for rule in ALL_RULES:
+        assert rule.name in r.stdout
+
+
+def test_committed_tree_is_clean_with_empty_baseline():
+    """The acceptance gate: src + scripts lint clean, and the committed
+    baseline file is empty (no grandfathered findings)."""
+    r = _run_cli("src", "scripts", "--baseline", "pems_lint_baseline.json")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 finding(s)" in r.stdout
+    with open(os.path.join(_ROOT, "pems_lint_baseline.json")) as f:
+        assert json.load(f) == []
