@@ -29,14 +29,13 @@ import json
 import os
 import sys
 import tempfile
-import time
 
 import jax
 import numpy as np
 
 from repro.io import IOEngine, open_file
 from repro.pems_apps import psrs_sort
-from .common import emit
+from .common import TRACER, emit
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -50,18 +49,18 @@ def _engine_row(td: str, driver: str, queue_depth: int, block_bytes: int,
     eng = IOEngine(f, queue_depth=queue_depth)
     data = rng.integers(0, 256, file_bytes, dtype=np.uint8)
     try:
-        t0 = time.perf_counter()
-        for o in range(0, file_bytes, block_bytes):
-            eng.submit_write(o, data[o:o + block_bytes])
-        eng.fsync()
-        w_s = time.perf_counter() - t0
+        with TRACER.span(f"engine_write_{driver}", tid="bench") as sp:
+            for o in range(0, file_bytes, block_bytes):
+                eng.submit_write(o, data[o:o + block_bytes])
+            eng.fsync()
+        w_s = sp.duration_s
 
         out = np.empty(file_bytes, np.uint8)
-        t0 = time.perf_counter()
-        for o in range(0, file_bytes, block_bytes):
-            eng.submit_read(o, out[o:o + block_bytes])
-        eng.drain()
-        r_s = time.perf_counter() - t0
+        with TRACER.span(f"engine_read_{driver}", tid="bench") as sp:
+            for o in range(0, file_bytes, block_bytes):
+                eng.submit_read(o, out[o:o + block_bytes])
+            eng.drain()
+        r_s = sp.duration_s
         data_ok = bool((out == data).all())
         row = {
             "driver": driver,
@@ -88,14 +87,14 @@ def _engine_row(td: str, driver: str, queue_depth: int, block_bytes: int,
 def _psrs_row(td: str, driver: str, exec_driver: str, keys, v: int, k: int,
               queue_depth: int, want, checksums: bool = False) -> dict:
     tag = f"psrs_{driver}_{exec_driver}{'_crc' if checksums else ''}.bin"
-    t0 = time.perf_counter()
-    out, pems = psrs_sort(
-        keys, v=v, k=k, driver=exec_driver, tier="file", io_driver=driver,
-        io_queue_depth=queue_depth, checksums=checksums,
-        backing_path=os.path.join(td, tag),
-        return_pems=True,
-    )
-    wall_s = time.perf_counter() - t0
+    with TRACER.span(f"psrs_{driver}_{exec_driver}", tid="bench") as sp:
+        out, pems = psrs_sort(
+            keys, v=v, k=k, driver=exec_driver, tier="file",
+            io_driver=driver, io_queue_depth=queue_depth,
+            checksums=checksums, backing_path=os.path.join(td, tag),
+            return_pems=True,
+        )
+    wall_s = sp.duration_s
     assert (out == want).all(), f"file-tier sort diverged: {driver}"
     led, ts = pems.ledger, pems.tier_stats
     fallback = bool(getattr(getattr(pems.backing, "file", None),

@@ -32,7 +32,6 @@ import json
 import os
 import sys
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,7 @@ from repro.core import analysis
 from repro.kernels.kway_merge import kway_merge
 from repro.pems_apps import psrs_plan, psrs_sort
 from repro.pems_apps.common import INT_MAX
-from .common import emit, time_fn
+from .common import TRACER, emit, time_fn
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -89,10 +88,11 @@ def _phase_rows(td: str, n: int, v: int, k: int, rng) -> dict:
     for _ in range(2):
         store = load(data)
         for name, step in steps:
-            t0 = time.perf_counter()
-            store = step(store)
-            jax.block_until_ready(store.field(_STAGE_SYNC[name]))
-            stage_s[name] = min(stage_s[name], time.perf_counter() - t0)
+            with TRACER.span(f"stage:{name}", tid="bench",
+                             cat="stage") as sp:
+                store = step(store)
+                jax.block_until_ready(store.field(_STAGE_SYNC[name]))
+            stage_s[name] = min(stage_s[name], sp.duration_s)
     result, _, oflow = extract(store)
     assert not np.asarray(oflow).any()
     assert (np.asarray(result).reshape(-1) < np.inf).all()
@@ -106,10 +106,11 @@ def _phase_rows(td: str, n: int, v: int, k: int, rng) -> dict:
     dense_s = float("inf")
     for _ in range(2):
         store = _run_steps(dload, dsteps, data, until="alltoallv")
-        t0 = time.perf_counter()
-        store = dict(dsteps)["merge"](store)
-        jax.block_until_ready(store.field("result"))
-        dense_s = min(dense_s, time.perf_counter() - t0)
+        with TRACER.span("stage:merge_dense", tid="bench",
+                         cat="stage") as sp:
+            store = dict(dsteps)["merge"](store)
+            jax.block_until_ready(store.field("result"))
+        dense_s = min(dense_s, sp.duration_s)
 
     return {
         "n_words": n, "v": v, "k": k,
@@ -144,12 +145,12 @@ def _merge_pair_row(n: int, v: int, k: int, tile: int, rng,
 
     ratios, d_best, k_best = [], float("inf"), float("inf")
     for _ in range(iters):                 # interleaved: machine speed cancels
-        t0 = time.perf_counter()
-        jax.block_until_ready(f_dense(brecv))
-        d_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        jax.block_until_ready(f_kernel(brecv, brcnt))
-        k_s = time.perf_counter() - t0
+        with TRACER.span("merge_dense", tid="bench") as sp:
+            jax.block_until_ready(f_dense(brecv))
+        d_s = sp.duration_s
+        with TRACER.span("merge_kernel", tid="bench") as sp:
+            jax.block_until_ready(f_kernel(brecv, brcnt))
+        k_s = sp.duration_s
         ratios.append(d_s / k_s)
         d_best, k_best = min(d_best, d_s), min(k_best, k_s)
     ratios.sort()
@@ -164,12 +165,12 @@ def _merge_pair_row(n: int, v: int, k: int, tile: int, rng,
 def _stream_row(td: str, n: int, v: int, k: int, tier: str, driver: str,
                 rng) -> dict:
     keys = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
-    t0 = time.perf_counter()
-    out, pems = psrs_sort(
-        keys, v=v, k=k, driver=driver, tier=tier,
-        backing_path=os.path.join(td, f"stream_{tier}_{driver}.bin"),
-        return_pems=True)
-    wall_s = time.perf_counter() - t0
+    with TRACER.span(f"stream_{tier}_{driver}", tid="bench") as sp:
+        out, pems = psrs_sort(
+            keys, v=v, k=k, driver=driver, tier=tier,
+            backing_path=os.path.join(td, f"stream_{tier}_{driver}.bin"),
+            return_pems=True)
+    wall_s = sp.duration_s
     assert (out == np.sort(keys)).all(), f"streamed sort diverged: {tier}"
     ts = pems.tier_stats
     return {
@@ -178,6 +179,47 @@ def _stream_row(td: str, n: int, v: int, k: int, tier: str, driver: str,
         "merge_prefetch_events": ts.merge_prefetch_events,
         "merge_stall_s": round(ts.merge_stall_s, 4),
         "overlap_fraction": round(ts.overlap_fraction, 4),
+    }
+
+
+def _obs_row(td: str, n: int, v: int, k: int, rng, iters: int) -> dict:
+    """Paired traced-vs-untraced PSRS: the tracing-overhead statistic.
+
+    Interleaved in-process like the merge pair, so machine speed cancels:
+    ``overhead_ratio`` is the median per-iteration (traced / untraced)
+    wall-time ratio on the async file-tier sort — the configuration with
+    the most instrumentation (engine request spans, round spans, stage
+    spans).  The regression gate caps it (``--obs-overhead``).  One traced
+    run's merged Perfetto trace is exported to ``BENCH_psrs.trace.json``
+    as the CI artifact."""
+    keys = rng.integers(-2**31, 2**31 - 1, size=n, dtype=np.int32)
+
+    def run_once(trace: bool, tag: str) -> float:
+        with TRACER.span(f"obs_{tag}", tid="bench") as sp:
+            psrs_sort(keys, v=v, k=k, driver="async", tier="file",
+                      backing_path=os.path.join(td, f"obs_{tag}.bin"),
+                      trace=trace)
+        return sp.duration_s
+
+    run_once(False, "warm_plain")
+    run_once(True, "warm_traced")
+    ratios, plain_best, traced_best = [], float("inf"), float("inf")
+    for _ in range(iters):
+        p_s = run_once(False, "plain")
+        t_s = run_once(True, "traced")
+        ratios.append(t_s / p_s)
+        plain_best, traced_best = min(plain_best, p_s), min(traced_best, t_s)
+    ratios.sort()
+
+    _, pems = psrs_sort(keys, v=v, k=k, driver="async", tier="file",
+                        backing_path=os.path.join(td, "obs_artifact.bin"),
+                        trace=True, return_pems=True)
+    pems.export_trace(os.path.join(REPO_ROOT, "BENCH_psrs.trace.json"))
+    return {
+        "tier": "file", "driver": "async", "n": n, "v": v, "k": k,
+        "plain_s": round(plain_best, 4),
+        "traced_s": round(traced_best, 4),
+        "overhead_ratio": round(ratios[len(ratios) // 2], 3),
     }
 
 
@@ -255,6 +297,12 @@ def run(smoke: bool | None = None) -> None:
                  f"prefetch={row['merge_prefetch_events']};"
                  f"stall={row['merge_stall_s']}")
 
+    with tempfile.TemporaryDirectory() as td:
+        obs_row = _obs_row(td, stream_n, 8, 2, rng, iters)
+    emit("psrs_obs_overhead", obs_row["traced_s"] * 1e6,
+         f"plain_s={obs_row['plain_s']};"
+         f"ratio={obs_row['overhead_ratio']}")
+
     out = {
         "benchmark": "psrs_phases",
         "backend": jax.default_backend(),
@@ -271,10 +319,15 @@ def run(smoke: bool | None = None) -> None:
                  "dense path cannot read green.  stream: PSRS on a disk "
                  "backing; merge_prefetch_events counts bucket reads "
                  "submitted ahead of need while the previous round merged "
-                 "(must stay nonzero)."),
+                 "(must stay nonzero).  obs: paired traced-vs-untraced "
+                 "sort — overhead_ratio is the median per-iteration "
+                 "(traced / untraced) ratio, gated by --obs-overhead; "
+                 "the traced run's merged Perfetto trace is exported to "
+                 "BENCH_psrs.trace.json."),
         "phases": phases,
         "merge": merge_rows,
         "stream": stream_rows,
+        "obs": obs_row,
     }
     name = "BENCH_psrs.smoke.json" if smoke else "BENCH_psrs.json"
     with open(os.path.join(REPO_ROOT, name), "w") as f:

@@ -1,22 +1,34 @@
-"""Benchmark utilities: wall-clock timing with warmup + CSV emission."""
+"""Benchmark utilities: wall-clock timing with warmup + CSV emission.
+
+All timing goes *through* :data:`TRACER` (the :mod:`repro.obs` span API):
+a benchmark's reported number is the very span duration a trace export
+would show, so the two can never disagree.  Per-bench scripts time their
+phases with ``with TRACER.span(...) as sp: ...`` and read
+``sp.duration_s`` instead of hand-rolling ``perf_counter()`` pairs.
+"""
 
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
 
+from repro.obs import Tracer
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+# Shared process-wide tracer for every bench script's timed regions.
+TRACER = Tracer(name="bench")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            name: str = "bench") -> float:
     """Median wall time in microseconds (blocks on async dispatch)."""
     for _ in range(warmup):
         _block(fn(*args))
     times = []
     for _ in range(iters):
-        t0 = time.perf_counter()
-        _block(fn(*args))
-        times.append((time.perf_counter() - t0) * 1e6)
+        with TRACER.span(name, tid="bench") as sp:
+            _block(fn(*args))
+        times.append(sp.duration_s * 1e6)
     times.sort()
     return times[len(times) // 2]
 

@@ -31,7 +31,9 @@ Three schemas, dispatched on the files' ``benchmark`` field:
   rows (PSRS on a disk backing) must keep ``merge_prefetch_events`` > 0 in
   the *new* run: a streamed merge that stopped submitting bucket reads
   ahead of need is a regression even when wall time looks fine.  Missing
-  rows of either kind fail.
+  rows of either kind fail.  The ``obs`` row's paired traced-vs-untraced
+  wall-time ratio is capped at ``--obs-overhead`` (default 1.15) — the
+  span tracer must stay cheap enough to leave on.
 
 A machine-class guard skips the comparison (exit 0 with a notice) when the
 two files disagree on backend or sweep shape — a CPU baseline says nothing
@@ -131,7 +133,7 @@ def check_io(base: dict, new: dict, overlap_slack: float,
 
 
 def check_psrs(base: dict, new: dict, threshold: float,
-               merge_floor: float) -> int:
+               merge_floor: float, obs_overhead: float) -> int:
     def key(r):
         return (r["n_words"], r["tile"])
 
@@ -183,9 +185,30 @@ def check_psrs(base: dict, new: dict, threshold: float,
         print(f"FAIL: streamed merge submitted no prefetch reads on rows "
               f"{dead} — the stage stopped overlapping disk with compute")
         return 1
+
+    # Tracing-overhead gate: the obs row's paired (traced / untraced)
+    # ratio is within-run, so machine speed cancels; the ceiling is
+    # absolute.  A baseline with the row FAILs a new run without it — a
+    # sweep that silently dropped the traced leg must not read as green.
+    if base.get("obs") is not None:
+        obs = new.get("obs")
+        if obs is None:
+            print("FAIL: baseline has an obs overhead row but the new run "
+                  "has none")
+            return 1
+        ratio = obs["overhead_ratio"]
+        status = "ok" if ratio <= obs_overhead else "REGRESSED"
+        print(f"obs: traced/untraced paired ratio {ratio:.3f} "
+              f"(ceiling {obs_overhead:.2f}) [{status}]")
+        if status != "ok":
+            print(f"FAIL: tracing overhead {ratio:.3f}x exceeded the "
+                  f"{obs_overhead:.2f}x ceiling — the instrumented hot "
+                  "path got too expensive")
+            return 1
     print(f"OK: merge paired speedup above max({merge_floor}, "
-          f"baseline/{threshold}) on all {len(base_rows)} rows and every "
-          "streamed merge still prefetches")
+          f"baseline/{threshold}) on all {len(base_rows)} rows, every "
+          "streamed merge still prefetches, and tracing overhead is "
+          "within the ceiling")
     return 0
 
 
@@ -206,6 +229,10 @@ def main() -> int:
                     help="psrs_phases gate: absolute minimum paired merge "
                          "speedup_vs_dense (catches a silent fallback to "
                          "the dense re-sort regardless of baseline)")
+    ap.add_argument("--obs-overhead", type=float, default=1.15,
+                    help="psrs_phases gate: max allowed paired "
+                         "traced/untraced wall-time ratio of the obs row "
+                         "(within the new run, so machine speed cancels)")
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -227,7 +254,8 @@ def main() -> int:
         return check_io(base, new, args.overlap_slack,
                         args.checksum_overhead)
     if base.get("benchmark") == "psrs_phases":
-        return check_psrs(base, new, args.threshold, args.merge_floor)
+        return check_psrs(base, new, args.threshold, args.merge_floor,
+                          args.obs_overhead)
 
     # P defaults to 1 so pre-mesh baselines keep matching.
     base_cfgs = {(c["v"], c.get("P", 1), c["n_words"]): c

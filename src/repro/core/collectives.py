@@ -495,7 +495,30 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill,
 
     for p in procs:
         stats = self.shard_stats[p]
-        for c0 in range(p * m, (p + 1) * m, alpha):
+        # One span per destination process's network phase, one per α-chunk
+        # inside it (Alg 7.1.3 made visible): the trace shows exactly which
+        # chunk of which shard's delivery the run spent its time in.
+        with self.tracer.span(f"alltoallv.p{p}", tid="collective",
+                              cat="collective", alpha=alpha):
+            _alltoallv_proc_chunks(
+                self, p, m, v, ww, alpha, arr, full, disk, off_s, off_r,
+                fill, fill_word, Ct, bk, stats, chunk_copies)
+    if Ct is not None:
+        ct = Ct.astype(lo.field(recv_counts).dtype)
+        for p in procs:
+            store.with_field_rows(recv_counts, p * m, ct[p * m:(p + 1) * m])
+    return store
+
+
+def _alltoallv_proc_chunks(self, p, m, v, ww, alpha, arr, full, disk,
+                           off_s, off_r, fill, fill_word, Ct, bk, stats,
+                           chunk_copies):
+    """The α-chunk loop of :func:`_alltoallv_host` for one destination
+    process ``p`` — split out so each chunk can carry its own trace span
+    without deepening the host loop."""
+    for c0 in range(p * m, (p + 1) * m, alpha):
+        with self.tracer.span("chunk", tid="collective", cat="collective",
+                              dst=p, c0=c0):
             c1 = min(c0 + alpha, (p + 1) * m)
             if full is not None:
                 cols = full[:, c0 * ww:c1 * ww]
@@ -524,11 +547,6 @@ def _alltoallv_host(self, store, send, recv, send_counts, recv_counts, fill,
             if disk:
                 # The writes land entirely in destination shard p.
                 self._account_disk(c0, c1, v * ww * WORD, write=True)
-    if Ct is not None:
-        ct = Ct.astype(lo.field(recv_counts).dtype)
-        for p in procs:
-            store.with_field_rows(recv_counts, p * m, ct[p * m:(p + 1) * m])
-    return store
 
 
 def _global_transpose(self, M: jnp.ndarray) -> jnp.ndarray:

@@ -38,6 +38,7 @@ and ``Pems.tier_stats`` the wall-clock overlap.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import weakref
 from concurrent.futures import ThreadPoolExecutor
@@ -50,6 +51,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.io import IO_DRIVERS
+from repro.obs import NOOP, Tracer, merge_trace_files, trace_events, \
+    write_trace
 
 from .backing import TIERS, TieredStore, make_backing
 from .context import (
@@ -122,6 +125,12 @@ class PemsConfig:
       tiles, instead of the dense ``jnp.sort`` re-sort of the received
       buckets.  Bit-identical either way; ``merge_tile`` must be a power
       of two.
+    * ``trace``/``trace_path`` — :mod:`repro.obs` span tracing: record
+      superstep/round/engine/collective/recovery spans into per-process
+      ring buffers (results stay bit-identical; hot paths pay one
+      attribute check when off).  ``trace_path`` is where
+      :meth:`Pems.export_trace` writes the merged Perfetto JSON (and the
+      per-process ``<path>.p<p>`` part files under a sharded backing).
 
     Raises ``ValueError`` at construction for any invalid combination —
     unknown names, out-of-range ``alpha``, ``io_*`` knobs without
@@ -154,6 +163,10 @@ class PemsConfig:
                                 # path; bit-identical either way)
     merge_tile: int = 256       # k-way merge output tile width (power of
                                 # two; one merge grid step per tile)
+    trace: bool = False         # repro.obs span tracing (per-process ring
+                                # buffers; bit-identical results either way)
+    trace_path: Optional[str] = None  # where export_trace() writes the
+                                      # merged Perfetto JSON (requires trace)
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
@@ -220,6 +233,11 @@ class PemsConfig:
                 "integer >= 2 (one k-way merge grid step per tile)"
             )
         self.merge_tile = int(self.merge_tile)
+        if self.trace_path is not None and not self.trace:
+            raise ValueError(
+                f"trace_path={self.trace_path!r} requires trace=True "
+                "(nothing records spans to export otherwise)"
+            )
         if self.v % self.P:
             raise ValueError("v must be divisible by P")
         if (self.v // self.P) % self.k:
@@ -276,6 +294,24 @@ class Pems:
         self.backing = None   # last backing this executor created (tiered)
         self.cursors = None   # optional per-process durable SuperstepCursors:
                               # when set, _run_tiered notes round progress
+        # repro.obs tracing: the main tracer (stage/superstep/collective
+        # lanes, pid 0 on export) plus one tracer per process for the round
+        # loop and its shard's engine (pid p+1) — all on one shared epoch so
+        # the merged trace has comparable timestamps.  Disabled, everything
+        # aliases the NOOP singleton: instrumented code pays one attribute
+        # check, and results are bit-identical either way.
+        if cfg.trace:
+            self.tracer = Tracer(name="main")
+            if cfg.tier == "device":
+                self.shard_tracers = [self.tracer]
+            else:
+                self.shard_tracers = [
+                    Tracer(epoch=self.tracer.epoch, name=f"shard{p}")
+                    for p in range(cfg.P)
+                ]
+        else:
+            self.tracer = NOOP
+            self.shard_tracers = [NOOP] * max(1, cfg.P)
         if cfg.P > 1 and cfg.tier == "device" and mesh is None:
             raise ValueError("P > 1 requires a mesh with the vp axis "
                              "(device tier; backing tiers shard instead)")
@@ -332,6 +368,62 @@ class Pems:
             out = out.merge(st)
         return out
 
+    # -------------------------------------------------------- observability
+    def metrics_snapshot(self) -> dict:
+        """Flat metric-name dict subsuming ``TierStats`` and ``IOLedger``:
+        ``tier.*``/``ledger.*`` are the run totals (per-shard entries merged
+        at ``P > 1``), ``shard<p>.tier.*`` the per-process breakdown.
+        Embedded under ``"metrics"`` in exported traces, so the report CLI
+        can cross-check span-derived numbers against the counters."""
+        m = {}
+        stats = (self.merged_shard_stats() if len(self.shard_stats) > 1
+                 else self.tier_stats)
+        m.update(stats.snapshot())
+        led = self.ledger
+        for sl in self.shard_ledgers:
+            if sl is not led:
+                led = led.merge(sl)
+        m.update(led.snapshot())
+        if len(self.shard_stats) > 1:
+            for p, st in enumerate(self.shard_stats):
+                m.update(st.snapshot(prefix=f"shard{p}.tier"))
+        return m
+
+    def export_trace(self, path: Optional[str] = None) -> str:
+        """Write the recorded spans as one Perfetto-loadable JSON trace.
+
+        Under a sharded backing each per-process tracer is first written to
+        its own ``<path>.p<p>`` part file, then the parts are merged (each
+        keeping its own process lane) with the main tracer's events and the
+        :meth:`metrics_snapshot` into ``path`` (default: the config's
+        ``trace_path``).  Load the result in https://ui.perfetto.dev or
+        summarize it with ``python -m repro.obs report <path>``."""
+        path = self.cfg.trace_path if path is None else path
+        if path is None:
+            raise ValueError(
+                "export_trace needs a path (argument or "
+                "PemsConfig.trace_path)")
+        if not self.cfg.trace:
+            raise ValueError(
+                "export_trace requires PemsConfig(trace=True) — nothing "
+                "recorded spans")
+        parts = []
+        if self.shard_tracers[0] is not self.tracer:
+            for p, tr in enumerate(self.shard_tracers):
+                pp = f"{path}.p{p}"
+                write_trace(pp, trace_events(tr, pid=p + 1,
+                                             process_name=tr.name))
+                parts.append(pp)
+        main_events = trace_events(self.tracer, pid=0, process_name="main")
+        out = merge_trace_files(path, parts, extra_events=main_events,
+                                metrics=self.metrics_snapshot())
+        for pp in parts:                     # merged: the parts are spent
+            try:
+                os.unlink(pp)
+            except OSError:
+                pass
+        return out
+
     def _account_disk(self, r0: int, r1: int, row_bytes: int,
                       write: bool) -> None:
         """Bill measured disk traffic for global rows ``[r0, r1)`` to the
@@ -384,6 +476,21 @@ class Pems:
                                io_retries=cfg.io_retries,
                                io_backoff_s=cfg.io_backoff_s)
         self.backing = backing
+        if cfg.trace:
+            # Attach each shard's tracer to its engine and down the driver
+            # wrapper chain (faulty/sanitize proxies), duck-typed like the
+            # note_submit/note_complete hooks — no constructor churn.
+            shards = getattr(backing, "shards", None) or [backing]
+            for p, sh in enumerate(shards):
+                tr = self.shard_tracers[min(p, len(self.shard_tracers) - 1)]
+                eng = getattr(sh, "engine", None)
+                if eng is not None:
+                    eng.tracer = tr
+                f = getattr(sh, "file", None)
+                while f is not None:
+                    if hasattr(f, "tracer"):
+                        f.tracer = tr
+                    f = getattr(f, "inner", None)
         store = TieredStore(lo, backing, self.ledger,
                             shard_ledgers=self.shard_ledgers)
         if init_fn is not None:
@@ -443,6 +550,13 @@ class Pems:
         disjoint rows); ``TierStats.merge_prefetch_events`` counts the
         overlapped swap-ins and ``merge_stall_s`` the residual blocking.
         """
+        with self.tracer.span(f"superstep:{name}", tid="supersteps",
+                              cat="superstep", driver=self.cfg.driver,
+                              stream=stream):
+            return self._superstep_impl(store, fn, reads, writes, procs,
+                                        stream)
+
+    def _superstep_impl(self, store, fn, reads, writes, procs, stream):
         cfg = self.cfg
         lo = self.layout
         sliced = cfg.driver == "sliced" and reads is not None and writes is not None
@@ -585,6 +699,12 @@ class Pems:
         # true read+write overlap, measured by TierStats.rw_overlap_events.
         async_writeback = (use_async
                            and getattr(shard, "engine", None) is not None)
+        # Span lane for this process: the prefetch thread's swap_in spans
+        # land on their own tid, so the Perfetto view shows them genuinely
+        # overlapping the rounds lane's compute spans.  Every complete()
+        # below reuses the exact t0/t1 the stats were billed with — the
+        # trace and TierStats can never disagree.
+        tracer = self.shard_tracers[min(p, len(self.shard_tracers) - 1)]
 
         def fetch(r):
             t0 = time.perf_counter()
@@ -593,7 +713,10 @@ class Pems:
             d = jax.device_put(h)
             d.block_until_ready()
             led.add_tier_in(h.nbytes, disk)
-            stats.swap_in_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats.swap_in_s += t1 - t0
+            tracer.complete("swap_in", t0, t1, tid="prefetch", cat="io",
+                            round=r, bytes=h.nbytes)
             return d
 
         pool = ThreadPoolExecutor(max_workers=1) if use_async else None
@@ -603,8 +726,11 @@ class Pems:
                 if use_async:
                     t0 = time.perf_counter()
                     blk = nxt.result()
-                    dt = time.perf_counter() - t0
+                    t1 = time.perf_counter()
+                    dt = t1 - t0
                     stats.stall_s += dt
+                    tracer.complete("stall", t0, t1, tid="rounds",
+                                    cat="stall", round=r)
                     if streamed:
                         stats.merge_stall_s += dt
                     if r + 1 < rounds:
@@ -618,19 +744,28 @@ class Pems:
                 else:
                     t0 = time.perf_counter()
                     blk = fetch(r)
-                    stats.stall_s += time.perf_counter() - t0
+                    t1 = time.perf_counter()
+                    stats.stall_s += t1 - t0
+                    tracer.complete("stall", t0, t1, tid="rounds",
+                                    cat="stall", round=r)
 
                 t0 = time.perf_counter()
                 out = body(jnp.int32(base + r * k), blk)   # async dispatch
                 out_h = np.asarray(out)                    # blocks on compute
-                stats.compute_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats.compute_s += t1 - t0
+                tracer.complete("compute", t0, t1, tid="rounds",
+                                cat="compute", round=r)
 
                 t0 = time.perf_counter()
                 r0 = base + r * k
                 bk.write_block(r0, r0 + k, out_h, cols=out_idx,
                                wait=not async_writeback)
                 led.add_tier_out(out_h.nbytes, disk)
-                stats.swap_out_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats.swap_out_s += t1 - t0
+                tracer.complete("swap_out", t0, t1, tid="rounds", cat="io",
+                                round=r, bytes=out_h.nbytes)
                 stats.rounds += 1
                 if self.cursors and p < len(self.cursors):
                     # Advisory progress note (atomic, not fsynced): a resume

@@ -148,7 +148,17 @@ class IOLedger:
             "tier_total": self.tier_total,
         }
 
+    def snapshot(self, prefix: str = "ledger") -> Dict[str, int]:
+        """Flat metric-name view of :meth:`as_dict` (``"ledger.swap_in"``,
+        ...): the names under which these counters appear in the
+        ``repro.obs`` metrics snapshot embedded in exported traces."""
+        return {f"{prefix}.{k}": v for k, v in self.as_dict().items()}
+
     def merge(self, other: "IOLedger") -> "IOLedger":
+        """Combine two ledgers: byte/op counters sum; ``disk_space`` (a
+        per-process requirement, not a flow) takes the max.  Aggregates the
+        per-shard ledgers of a ``P > 1`` run back to the ``P == 1`` totals
+        — the sharding invariant the tier-1 tests pin."""
         out = IOLedger()
         for f in dataclasses.fields(IOLedger):
             setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
@@ -238,3 +248,9 @@ class TierStats:
         return dataclasses.asdict(self) | {
             "overlap_fraction": self.overlap_fraction,
         }
+
+    def snapshot(self, prefix: str = "tier") -> Dict[str, float]:
+        """Flat metric-name view of :meth:`as_dict` (``"tier.stall_s"``,
+        ...): the names under which these counters appear in the
+        ``repro.obs`` metrics snapshot embedded in exported traces."""
+        return {f"{prefix}.{k}": v for k, v in self.as_dict().items()}

@@ -37,6 +37,8 @@ import json
 import os
 from typing import Optional
 
+from repro.obs import NOOP
+
 __all__ = ["atomic_replace_file", "atomic_write_json", "fsync_dir",
            "SuperstepCursor"]
 
@@ -103,6 +105,13 @@ class SuperstepCursor:
     process re-runs (``procs=[p]``).
     """
 
+    # repro.obs tracing (attached post-construction by the runner, like the
+    # engine's): mark_in_progress opens a span on the recovery lane that
+    # mark_completed closes, so the trace shows each stage's durable
+    # in-progress window — exactly what a resume decision is made from.
+    tracer = NOOP
+    trace_tid = "recovery"
+
     def __init__(self, path: str):
         self.path = path
         self._cur = self._load()
@@ -141,11 +150,18 @@ class SuperstepCursor:
         self._cur = {"completed": self.completed, "in_progress": stage,
                      "stage": name, "round": None}
         atomic_write_json(self.path, self._cur, durable=True)
+        # Audited cross-call pair: the matching end() is in mark_completed —
+        # the in-progress window *is* the span, and a crash inside it is
+        # closed at export by the balance sanitizer.
+        # pems-lint: disable=trace-balance
+        self.tracer.begin(f"in_progress:{name or stage}", tid=self.trace_tid,
+                          cat="recovery", stage=stage)
 
     def mark_completed(self, stage: int, name: Optional[str] = None) -> None:
         self._cur = {"completed": stage, "in_progress": None,
                      "stage": name, "round": None}
         atomic_write_json(self.path, self._cur, durable=True)
+        self.tracer.end(f"in_progress:{name or stage}", tid=self.trace_tid)
 
     def note_round(self, r: int) -> None:
         """Advisory executor-round progress (atomic but not fsynced — a

@@ -47,6 +47,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional
 
+from repro.obs import NOOP
+
 from .aligned import align_down, align_up
 
 _MAX_WORKERS = 16
@@ -62,7 +64,8 @@ class IORequest:
     re-raises any worker error; ``done`` is non-blocking."""
 
     __slots__ = ("op", "offset", "nbytes", "data", "out", "syscall_bytes",
-                 "error", "auto_reap", "attempts", "_a0", "_a1", "_event")
+                 "error", "auto_reap", "attempts", "t_submit", "_a0", "_a1",
+                 "_event")
 
     def __init__(self, op: str, offset: int, nbytes: int, data, out,
                  align: int, auto_reap: bool = False):
@@ -71,6 +74,9 @@ class IORequest:
         self.nbytes = nbytes
         self.data = data                # write source (held until complete)
         self.out = out                  # read destination buffer
+        self.t_submit = 0.0             # perf_counter at submit: request age
+                                        # in drain diagnostics, queue time in
+                                        # trace spans
         self.syscall_bytes = 0
         self.auto_reap = auto_reap      # fire-and-forget: skip _completed
         self.attempts = 0               # driver calls issued (1 = no retry)
@@ -153,6 +159,10 @@ class IOEngine:
         self.retries = 0                # transient re-attempts issued
         self.backoff_s = 0.0            # scheduled backoff (deterministic)
         self.permanent_errors = 0       # requests that finally errored
+        # repro.obs tracing: attached post-construction by the executor
+        # (like the duck-typed stats/ledger mirrors).  NOOP by default, so
+        # the per-request instrumentation costs one attribute check.
+        self.tracer = NOOP
         # Test hook: workers block here before touching the file, so tests
         # can hold requests in flight deterministically.  Set by default.
         self._gate = threading.Event()
@@ -186,6 +196,7 @@ class IOEngine:
     def _submit(self, req: IORequest) -> IORequest:
         if self._closed:
             raise RuntimeError("submit on a closed IOEngine")
+        req.t_submit = time.perf_counter()
         if not self._slots.acquire(blocking=False):
             t0 = time.perf_counter()
             self._slots.acquire()
@@ -217,6 +228,8 @@ class IOEngine:
             if self.stats is not None:
                 self.stats.max_queue_depth = max(
                     self.stats.max_queue_depth, depth)
+        if self.tracer.enabled:
+            self.tracer.counter("queue_depth", depth, tid="queue")
         self._pool.submit(self._execute, req)
         return req
 
@@ -241,6 +254,7 @@ class IOEngine:
 
     def _execute(self, req: IORequest) -> None:
         self._gate.wait()
+        t_exec0 = time.perf_counter()
         attempt = 0
         while True:
             try:
@@ -289,7 +303,21 @@ class IOEngine:
             req.out = None           # … and the read destination reference
             if not req.auto_reap or req.error is not None:
                 self._completed.append(req)
+            depth = len(self._inflight)
             self._quiet.notify_all()
+        if self.tracer.enabled:
+            # One complete span per request on this worker thread's lane:
+            # the driver execution (incl. retries/backoff), with queue time
+            # as an attribute — submit→execute→complete in one event.
+            self.tracer.complete(
+                req.op, t_exec0, time.perf_counter(),
+                tid=threading.current_thread().name, cat="request",
+                offset=req.offset, bytes=req.nbytes,
+                driver=getattr(self.file, "driver", "?"),
+                retries=req.attempts - 1,
+                queued_us=round((t_exec0 - req.t_submit) * 1e6),
+                error=type(req.error).__name__ if req.error else None)
+            self.tracer.counter("queue_depth", depth, tid="queue")
         req._event.set()
         self._slots.release()
 
@@ -338,17 +366,29 @@ class IOEngine:
                     continue
                 left = deadline - time.monotonic()
                 if left <= 0:
-                    pend = [(r.op, r.offset, r.nbytes)
-                            for r in self._inflight]
+                    # Each stuck request's age (since submit) and byte
+                    # range: enough to tell a wedged worker from a slow
+                    # one, and to map the range back to context rows.
+                    now = time.perf_counter()
+                    pend = [
+                        (r.op, f"[{r.offset},{r.offset + r.nbytes})",
+                         f"age={now - r.t_submit:.3f}s")
+                        for r in self._inflight
+                    ]
                     who = f"engine {self.name!r} " if self.name else ""
+                    self.tracer.instant(
+                        "drain_timeout", tid="events", cat="engine",
+                        timeout_s=timeout, in_flight=len(pend),
+                        stuck=[list(p) for p in pend[:4]])
                     raise TimeoutError(
                         f"IOEngine.drain timed out after {timeout}s with "
                         f"{len(pend)} request(s) still in flight on "
                         f"{who}{getattr(self.file, 'path', '?')!r} (driver="
                         f"{getattr(self.file, 'driver', '?')}): first "
-                        f"{pend[:4]} as (op, offset, nbytes) — a worker is "
-                        "stuck; check for a stalled device, an injected "
-                        "latency fault, or a held test gate")
+                        f"{pend[:4]} as (op, [byte range), age since "
+                        "submit) — a worker is stuck; check for a stalled "
+                        "device, an injected latency fault, or a held "
+                        "test gate")
                 self._quiet.wait(left)
             done, self._completed = self._completed, []
         for r in done:

@@ -1,4 +1,4 @@
-"""The five repo-grown rules, one module per rule.
+"""The six repo-grown rules, one module per rule.
 
 ``ALL_RULES`` is the registry the CLI and tests iterate; rule ids are the
 strings used in suppression comments and the baseline file.
@@ -8,6 +8,7 @@ from .block_api import BlockApiOnly
 from .durability import AtomicDurability
 from .ledger import LedgerBalance
 from .submit_mutate import SubmitThenMutate
+from .trace_balance import TraceBalance
 from .trace_purity import TracePurity
 
 ALL_RULES = (
@@ -16,7 +17,8 @@ ALL_RULES = (
     LedgerBalance(),
     TracePurity(),
     SubmitThenMutate(),
+    TraceBalance(),
 )
 
 __all__ = ["ALL_RULES", "AtomicDurability", "BlockApiOnly", "LedgerBalance",
-           "SubmitThenMutate", "TracePurity"]
+           "SubmitThenMutate", "TraceBalance", "TracePurity"]

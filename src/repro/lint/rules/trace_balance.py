@@ -1,0 +1,86 @@
+"""Rule ``trace-balance``: every ``tracer.begin`` closes in its scope.
+
+The :mod:`repro.obs` tracer's ``begin``/``end`` primitives emit raw "B"/"E"
+events; a ``begin`` that never meets its ``end`` leaves a dangling span the
+exporter has to synthesize a close for (:func:`repro.obs.export._balanced`)
+— the trace stays loadable, but the span's duration is a guess.  The
+``span()`` context manager cannot leak (``__exit__`` always completes the
+span), so the invariant is: prefer ``span()``; where raw ``begin`` is
+needed, the matching ``end`` must be reachable in the *same* scope.
+
+Intraprocedural, source-line order per scope: a call whose receiver's last
+dotted component is ``tracer`` (``self.tracer``, ``tracer``, ``TRACER``,
+``self._tracer``) and whose method is ``begin`` pushes; ``end`` pops the
+innermost open begin.  Begins still open at scope end are findings.  A bare
+``end`` with no open begin is ignored — deliberate cross-method pairs
+(e.g. a cursor's ``mark_in_progress``/``mark_completed``) keep their
+``end`` side clean and suppress the ``begin`` side with an audit comment.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from ..astutil import function_scopes
+from ..engine import FileContext, Finding, Rule
+
+_METHODS = {"begin", "end"}
+
+
+def _tracer_method(call: ast.Call) -> Optional[str]:
+    """``"begin"``/``"end"`` when ``call`` is ``<...>.tracer.begin(...)``
+    (or ``end``) with a tracer-named receiver, else None."""
+    func = call.func
+    if not isinstance(func, ast.Attribute) or func.attr not in _METHODS:
+        return None
+    recv = func.value
+    if isinstance(recv, ast.Attribute):
+        last = recv.attr
+    elif isinstance(recv, ast.Name):
+        last = recv.id
+    else:
+        return None
+    if last.lower().lstrip("_") != "tracer":
+        return None
+    return func.attr
+
+
+class TraceBalance(Rule):
+    name = "trace-balance"
+    summary = ("every tracer.begin(...) in a scope needs a matching "
+               "tracer.end(...) — or use the span() context manager")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for scope in function_scopes(ctx.tree):
+            yield from self._check_scope(ctx, scope)
+
+    def _calls(self, scope: ast.AST) -> List[ast.Call]:
+        """Tracer begin/end calls in source order, nested defs excluded."""
+        out: List[ast.Call] = []
+        stack: List[ast.AST] = list(scope.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Call) and _tracer_method(node):
+                out.append(node)
+            stack.extend(ast.iter_child_nodes(node))
+        out.sort(key=lambda c: (c.lineno, c.col_offset))
+        return out
+
+    def _check_scope(self, ctx: FileContext, scope: ast.AST
+                     ) -> Iterator[Finding]:
+        open_begins: List[ast.Call] = []
+        for call in self._calls(scope):
+            if _tracer_method(call) == "begin":
+                open_begins.append(call)
+            elif open_begins:
+                open_begins.pop()
+        for call in open_begins:
+            yield self.finding(
+                ctx, call,
+                "tracer.begin(...) with no matching tracer.end(...) in "
+                "this scope — the span dangles until the exporter "
+                "synthesizes a close; use the span() context manager, or "
+                "end it in the same scope")

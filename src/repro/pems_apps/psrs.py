@@ -49,7 +49,8 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
            P: int = 1, mesh=None, alpha=None,
            io_driver=None, io_queue_depth=None,
            fault_spec=None, checksums: bool = False, io_retries=None,
-           merge_kernel=None, merge_tile=None):
+           merge_kernel=None, merge_tile=None,
+           trace: bool = False, trace_path=None):
     # One home for the PSRS capacity defaults: the always-safe per-message
     # bound n/v and the 2n/v per-receiver guarantee.
     cap = n_v if cap is None else cap
@@ -88,6 +89,10 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
         io_kw["merge_kernel"] = bool(merge_kernel)
     if merge_tile is not None:
         io_kw["merge_tile"] = merge_tile
+    if trace:
+        io_kw["trace"] = True
+    if trace_path is not None:
+        io_kw["trace_path"] = trace_path
     pems = Pems(PemsConfig(v=v, k=k, P=P, driver=driver, tier=tier,
                            backing_path=backing_path, alpha=alpha,
                            device_cap_bytes=device_cap_bytes, **io_kw),
@@ -187,6 +192,19 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
             stream=True)),
     ]
 
+    # Stage spans on the main tracer's "stages" lane: one per plan stage,
+    # the unit the obs report attributes compute/I-O/stall time to.  With
+    # tracing off pems.tracer is the no-op singleton, so the wrapper costs
+    # one attribute check per stage (and is jit-transparent).
+    def _staged(name, fn):
+        def run(st, procs=None):
+            with pems.tracer.span(f"stage:{name}", tid="stages",
+                                  cat="stage"):
+                return fn(st, procs=procs)
+        return run
+
+    steps = [(name, _staged(name, fn)) for name, fn in steps]
+
     def load(data_blocks):                  # [v, n_v] int32
         return pems.init().with_field("data", data_blocks)
 
@@ -202,8 +220,10 @@ def _build(v: int, k: int, n_v: int, cap, rcap, driver: str,
 
     # The P > 1 mesh path runs the stages eagerly (each superstep/collective
     # shard_maps and jits internally); the single-process device tier still
-    # jit-fuses the whole pipeline as the seed did.
-    if tier == "device" and P == 1:
+    # jit-fuses the whole pipeline as the seed did.  Tracing forces the
+    # eager path — spans inside a jitted program would fire once at trace
+    # time and never again (results are bit-identical either way).
+    if tier == "device" and P == 1 and not pems.cfg.trace:
         program = jax.jit(program)
     return pems, program, (load, steps, extract)
 
@@ -231,6 +251,8 @@ def psrs_plan(
     io_retries=None,
     merge_kernel: Optional[bool] = None,
     merge_tile: Optional[int] = None,
+    trace: bool = False,
+    trace_path: Optional[str] = None,
 ):
     """Stepwise PSRS: returns ``(pems, load, steps, extract)``.
 
@@ -238,6 +260,11 @@ def psrs_plan(
     ``steps`` is a list of named ``store -> store`` stages (run them in
     order, or stop after any stage, checkpoint the backing store, and
     resume later); ``extract(store) -> (result, rcount, oflow)``.
+
+    ``trace=True`` records structured spans (stages, executor rounds, I/O
+    requests, collective chunks) into ``pems.tracer``; export with
+    ``pems.export_trace(path)`` (or set ``trace_path`` — :func:`psrs_sort`
+    / :func:`psrs_run_recoverable` then export automatically).
     """
     pems, _, (load, steps, extract) = _build(
         v, k, n_v, cap, rcap, driver, mode, local_sort,
@@ -246,6 +273,7 @@ def psrs_plan(
         io_driver=io_driver, io_queue_depth=io_queue_depth,
         fault_spec=fault_spec, checksums=checksums, io_retries=io_retries,
         merge_kernel=merge_kernel, merge_tile=merge_tile,
+        trace=trace, trace_path=trace_path,
     )
     return pems, load, steps, extract
 
@@ -274,6 +302,8 @@ def psrs_sort(
     io_retries=None,
     merge_kernel: Optional[bool] = None,
     merge_tile: Optional[int] = None,
+    trace: bool = False,
+    trace_path: Optional[str] = None,
 ):
     """Sort int32 ``keys`` ([n], n divisible by v) with PSRS on PEMS.
 
@@ -318,6 +348,15 @@ def psrs_sort(
     measured in ``pems.shard_ledgers[p]``/``pems.shard_stats[p]`` and sums
     to the ``P == 1`` totals; results stay bit-identical.
 
+    ``trace=True`` records structured spans for the whole run — per-stage
+    and per-superstep, executor rounds (compute vs swap_in/swap_out vs
+    stall), per-request engine I/O, collective chunks — in the
+    :mod:`repro.obs` tracer (device-tier ``P == 1`` then runs eagerly
+    instead of whole-program jit; results are bit-identical).  With
+    ``trace_path`` set the merged Chrome/Perfetto trace (plus a metrics
+    snapshot) is written there on completion; inspect with
+    ``python -m repro.obs report <path>``.
+
     Raises ``ValueError`` for n not divisible by v (and for any invalid
     :class:`~repro.core.PemsConfig` combination) and ``OverflowError``
     when a bucket exceeds ``cap``/``rcap``.
@@ -337,11 +376,14 @@ def psrs_sort(
                               fault_spec=fault_spec, checksums=checksums,
                               io_retries=io_retries,
                               merge_kernel=merge_kernel,
-                              merge_tile=merge_tile)
+                              merge_tile=merge_tile,
+                              trace=trace, trace_path=trace_path)
     data = keys.reshape(v, n_v)
     if tier != "device":
         data = np.asarray(data)
     result, rcount, oflow = program(data)
+    if pems.cfg.trace_path is not None:
+        pems.export_trace()
     result = np.asarray(result)
     rcount = np.asarray(rcount)[:, 0]
     if np.asarray(oflow).any():
@@ -412,6 +454,8 @@ def psrs_run_recoverable(
     return_pems: bool = False,
     merge_kernel: Optional[bool] = None,
     merge_tile: Optional[int] = None,
+    trace: bool = False,
+    trace_path: Optional[str] = None,
 ):
     """PSRS with durable superstep recovery: survives ``kill -9``.
 
@@ -467,7 +511,8 @@ def psrs_run_recoverable(
         backing_path=backing_path, device_cap_bytes=device_cap_bytes,
         io_driver=io_driver, io_queue_depth=io_queue_depth,
         fault_spec=fault_spec, checksums=checksums, io_retries=io_retries,
-        merge_kernel=merge_kernel, merge_tile=merge_tile)
+        merge_kernel=merge_kernel, merge_tile=merge_tile,
+        trace=trace, trace_path=trace_path)
 
     m_ctx = v // P                        # contexts per process
     data_blocks = keys.reshape(v, n_v)
@@ -499,6 +544,9 @@ def psrs_run_recoverable(
 
     cursors = [SuperstepCursor(SuperstepCursor.path_for(state_dir, p, P))
                for p in range(P)]
+    for p, cur in enumerate(cursors):
+        cur.tracer = pems.tracer
+        cur.trace_tid = f"recovery.p{p}" if P > 1 else "recovery"
     pems.cursors = cursors
 
     store = pems.init()      # create-or-reuse: committed rows are kept
@@ -519,20 +567,25 @@ def psrs_run_recoverable(
                 bk.recompute_checksums()
         snap = _load_snapshot(state_dir, int(in_prog), p, P)
         if snap is not None:
-            for fname, val in snap.items():
-                store = store.with_field_rows(fname, p * m_ctx, val)
+            with pems.tracer.span("snapshot:restore", tid="recovery",
+                                  cat="recovery", proc=p,
+                                  stage=int(in_prog)):
+                for fname, val in snap.items():
+                    store = store.with_field_rows(fname, p * m_ctx, val)
 
     for i, (name, fn) in enumerate(stages):
         todo = [p for p in range(P) if i > cursors[p].completed]
         for p in todo:
             fields = STAGE_SNAPSHOT_FIELDS.get(name, ())
             if fields:
-                _save_snapshot(
-                    state_dir, i,
-                    {f: np.asarray(
-                        store.field_rows(f, p * m_ctx, (p + 1) * m_ctx))
-                     for f in fields},
-                    p, P)
+                with pems.tracer.span("snapshot:save", tid="recovery",
+                                      cat="recovery", proc=p, stage=i):
+                    _save_snapshot(
+                        state_dir, i,
+                        {f: np.asarray(
+                            store.field_rows(f, p * m_ctx, (p + 1) * m_ctx))
+                         for f in fields},
+                        p, P)
             cursors[p].mark_in_progress(i, name)
             store = fn(store, procs=[p])
             if crash_in == i and p == todo[-1]:
@@ -549,6 +602,8 @@ def psrs_run_recoverable(
         if todo and crash_after == i:
             os.kill(os.getpid(), signal.SIGKILL)
 
+    if pems.cfg.trace_path is not None:
+        pems.export_trace()
     result, rcount, oflow = extract(store)
     result = np.asarray(result)
     rcount = np.asarray(rcount)[:, 0]

@@ -1,0 +1,12 @@
+"""Fixture: fires trace-balance exactly once (a tracer.begin whose end is
+only reachable on the early-return path, so the scope leaks the span)."""
+
+
+def run_round(self, r):
+    self.tracer.begin(f"round:{r}", tid="rounds")
+    if self.compute(r):
+        return True
+    self.tracer.begin("retry", tid="rounds")
+    self.compute(r)
+    self.tracer.end("retry", tid="rounds")
+    return False

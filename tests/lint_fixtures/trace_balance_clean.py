@@ -1,0 +1,19 @@
+"""Clean twin of trace_balance_bad: begin/end paired in-scope, the span()
+context manager, and a bare cross-method end (ignored by the rule)."""
+
+
+def run_round(self, r):
+    self.tracer.begin(f"round:{r}", tid="rounds")
+    ok = self.compute(r)
+    self.tracer.end(f"round:{r}", tid="rounds")
+    return ok
+
+
+def run_spanned(tracer, fn):
+    with tracer.span("work", tid="main"):
+        return fn()
+
+
+def mark_completed(self, stage):
+    # The matching begin lives in another method; a bare end is clean.
+    self.tracer.end(f"in_progress:{stage}", tid="recovery")

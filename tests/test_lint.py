@@ -32,6 +32,7 @@ def _lint(*paths, rules=ALL_RULES):
     ("ledger_double_bad.py", "ledger-balance", 7),
     ("trace_bad.py", "trace-purity", 6),
     ("submit_bad.py", "submit-then-mutate", 7),
+    ("trace_balance_bad.py", "trace-balance", 6),
 ])
 def test_seeded_fixture_fires_exactly_one_rule(fixture, rule, line):
     findings, suppressed = _lint(fixture)
@@ -46,7 +47,7 @@ def test_seeded_fixture_fires_exactly_one_rule(fixture, rule, line):
 
 @pytest.mark.parametrize("fixture", [
     "block_api_clean.py", "durability_clean.py", "ledger_clean.py",
-    "trace_clean.py", "submit_clean.py",
+    "trace_clean.py", "submit_clean.py", "trace_balance_clean.py",
 ])
 def test_clean_twin_fires_nothing(fixture):
     findings, _ = _lint(fixture)
